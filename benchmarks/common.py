@@ -1,0 +1,42 @@
+"""Shared benchmark plumbing: CSV emission, timing, workload scales.
+
+Every paper-figure benchmark emits rows
+    name,us_per_call,derived
+where `derived` carries the figure's metric (e.g. percent improvement of
+G-DM over O(m)Alg) so EXPERIMENTS.md can quote the CSV directly.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+_rows: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    _rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def save_json(name: str, payload) -> Path:
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=str))
+    return p
+
+
+def flush_csv(name: str = "benchmarks") -> None:
+    p = RESULTS / f"{name}.csv"
+    with open(p, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in _rows:
+            f.write(f"{r[0]},{r[1]:.1f},{r[2]}\n")

@@ -1,0 +1,99 @@
+"""§Perf hillclimb driver — reproduces the EXPERIMENTS.md §6 variant
+measurements as commands instead of narrative:
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell decode   # §6.2
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell train    # §6.1
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell moe      # §6.3
+
+Each prints the baseline and every iteration's roofline terms/memory as
+JSON lines (and appends to benchmarks/results/hillclimb_<cell>.json).
+Heavy: each variant is a fresh 256-device compile (minutes per line).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from .common import RESULTS
+
+
+def _emit(rows, name):
+    (RESULTS / f"hillclimb_{name}.json").write_text(
+        json.dumps(rows, indent=1, default=str))
+
+
+def _row(tag, res):
+    out = {"variant": tag,
+           "roofline": res["roofline"],
+           "mem_gib": res["memory"].get("per_device_total_gib"),
+           "coll_total_gb": round(res["collectives"]["total"] / 1e9, 3)}
+    print(json.dumps(out))
+    return out
+
+
+def decode_cell():
+    from repro.launch.dryrun import run_cell
+    rows = []
+    rows.append(_row("baseline(heads)", run_cell(
+        "tinyllama-1.1b", "decode_32k", verbose=False)))
+    rows.append(_row("dh", run_cell(
+        "tinyllama-1.1b", "decode_32k",
+        variant={"cache_layout": "dh",
+                 "config": {"decode_cache_layout": "dh"}}, verbose=False)))
+    rows.append(_row("seq(flash-decode)", run_cell(
+        "tinyllama-1.1b", "decode_32k",
+        variant={"cache_layout": "seq",
+                 "config": {"decode_cache_layout": "seq"}}, verbose=False)))
+    rows.append(_row("qwen3-4b seq (generalization)", run_cell(
+        "qwen3-4b", "decode_32k",
+        variant={"cache_layout": "seq",
+                 "config": {"decode_cache_layout": "seq"}}, verbose=False)))
+    _emit(rows, "decode")
+
+
+def train_cell():
+    from repro.launch.dryrun import run_cell
+    rows = []
+    rows.append(_row("baseline", run_cell(
+        "qwen2.5-32b", "train_4k", verbose=False, probe_cost=False)))
+    rows.append(_row("zero", run_cell(
+        "qwen2.5-32b", "train_4k", variant={"zero": True},
+        verbose=False, probe_cost=False)))
+    rows.append(_row("zero+micro16", run_cell(
+        "qwen2.5-32b", "train_4k",
+        variant={"zero": True, "micro_steps": 16},
+        verbose=False, probe_cost=False)))
+    rows.append(_row("zero+micro16+dots", run_cell(
+        "qwen2.5-32b", "train_4k",
+        variant={"zero": True, "micro_steps": 16,
+                 "config": {"remat": "dots"}},
+        verbose=False, probe_cost=False)))
+    _emit(rows, "train")
+
+
+def moe_cell():
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+    base = get_config("qwen3-moe-235b-a22b")
+    rows = []
+    rows.append(_row("ffn-TP (pre-fix baseline)", run_cell(
+        "qwen3-moe-235b-a22b", "train_4k",
+        variant={"moe_ffn_tp": True}, verbose=False, probe_cost=False)))
+    rows.append(_row("EP (default)", run_cell(
+        "qwen3-moe-235b-a22b", "train_4k", verbose=False, probe_cost=False)))
+    # shard_map dispatch: compiles+verifies at <=8 devices; XLA:CPU aborts
+    # at >=64 partitions (EXPERIMENTS.md §6.3 it.2) — not invoked here.
+    _emit(rows, "moe")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=("decode", "train", "moe"),
+                    required=True)
+    args = ap.parse_args()
+    {"decode": decode_cell, "train": train_cell, "moe": moe_cell}[args.cell]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Per-kernel microbenchmarks: wall time per call (interpret mode on CPU —
+functional timing, NOT TPU perf; the TPU roofline terms are derived
+analytically from the tile shapes and reported as `derived`)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import emit, timed
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def flash_attention_bench():
+    from repro.kernels.flash_attention import flash_attention
+
+    B, Hq, Hkv, S, d = 1, 4, 2, 256, 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), jnp.float32)
+    out, us = timed(lambda: flash_attention(q, k, v, block_q=64, block_k=64)
+                    .block_until_ready())
+    flops = 4 * B * Hq * S * S * d          # 2 matmuls, fwd
+    bytes_ = (q.size + k.size + v.size + out.size) * 4
+    t_c, t_m = flops / PEAK_FLOPS, bytes_ / HBM_BW
+    emit("kernel_flash_attention", us,
+         f"tpu_compute_s={t_c:.2e};tpu_memory_s={t_m:.2e};"
+         f"bound={'compute' if t_c > t_m else 'memory'}")
+
+
+def ssd_scan_bench():
+    from repro.kernels.ssd_scan import ssd_scan
+
+    B, S, H, G, N, P = 1, 256, 4, 1, 64, 64
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.8, 1.0, size=(B, S, H)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    out, us = timed(lambda: ssd_scan(x, a, b, c, chunk=64).block_until_ready())
+    L = 64
+    nC = S // L
+    flops = B * H * nC * (2 * L * L * N + 2 * L * L * P + 2 * L * N * P * 2)
+    bytes_ = (x.size + a.size + b.size + c.size + out.size) * 4
+    t_c, t_m = flops / PEAK_FLOPS, bytes_ / HBM_BW
+    emit("kernel_ssd_scan", us,
+         f"tpu_compute_s={t_c:.2e};tpu_memory_s={t_m:.2e};"
+         f"bound={'compute' if t_c > t_m else 'memory'}")
+
+
+def coflow_merge_bench():
+    from repro.kernels.coflow_merge import interval_alphas
+
+    rng = np.random.default_rng(0)
+    E, K, m = 4000, 8192, 150
+    t0 = rng.integers(0, K - 2, E)
+    t1 = t0 + rng.integers(1, 64, E)
+    si = np.minimum(t0, K - 1)
+    ei = np.minimum(t1, K)
+    s = rng.integers(0, m, E)
+    r = rng.integers(0, m, E)
+    out, us = timed(interval_alphas, si, ei, s, r, K, m)
+    ports_pad = ((2 * m + 127) // 128) * 128
+    bytes_ = K * ports_pad * 4 * 2          # read deltas + running counts
+    t_m = bytes_ / HBM_BW
+    emit("kernel_coflow_merge", us,
+         f"tpu_memory_s={t_m:.2e};bound=memory (one pass, ~2 ops/byte)")
+
+
+def run():
+    flash_attention_bench()
+    ssd_scan_bench()
+    coflow_merge_bench()

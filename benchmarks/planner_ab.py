@@ -1,0 +1,92 @@
+"""Planner A/B (framework integration benchmark): the paper's scheduler
+applied to (a) collectives extracted from a real compiled train step and
+(b) a multi-tenant pod fabric, versus naive program-order one-at-a-time.
+
+The single-SPMD-step regime is reported even though delay-and-merge does
+NOT win TWCT there (homogeneous ring coflows — the paper's own small-m
+regime); the makespan of the collective phase is the planner objective and
+the multi-tenant regime is where both metrics win. See EXPERIMENTS.md
+§Planner for the regime analysis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Coflow, Instance, Job, gdm, om_alg
+
+from .common import emit, save_json, timed
+
+
+def single_step_instance(seed: int = 0):
+    from repro.dist.planner import CollectiveOp, coflows_from_step
+
+    rng = np.random.default_rng(seed)
+    ops = []
+    for i in range(18):
+        ops.append(CollectiveOp("all-gather" if i % 3 else "all-reduce",
+                                float(rng.integers(2 ** 22, 2 ** 26)), i, "model"))
+    for i in range(6):
+        ops.append(CollectiveOp("all-reduce",
+                                float(rng.integers(2 ** 24, 2 ** 27)),
+                                18 + i, "data"))
+    return coflows_from_step(ops, rows=8, cols=8, n_buckets=8)
+
+
+def single_step_from_hlo(hlo_text: str):
+    from repro.dist.planner import coflows_from_step, extract_collectives
+
+    ops = extract_collectives(hlo_text)
+    return coflows_from_step(ops, rows=8, cols=8, n_buckets=8)
+
+
+def multi_tenant_instance(seed: int = 2, rows: int = 8, cols: int = 8,
+                          tenants: int = 8):
+    rng = np.random.default_rng(seed)
+    m = rows * cols
+    jobs = []
+    for t in range(tenants):
+        rset = rng.choice(rows, size=rng.integers(2, 5), replace=False)
+        cset = rng.choice(cols, size=rng.integers(2, 5), replace=False)
+        n_cf = int(rng.integers(2, 6))
+        coflows = []
+        for k in range(n_cf):
+            d = np.zeros((m, m), np.int64)
+            x = int(rng.integers(20, 400))
+            if rng.random() < 0.5:
+                for r in rset:
+                    g = np.arange(r * cols, (r + 1) * cols)
+                    for i in range(cols):
+                        d[g[i], g[(i + 1) % cols]] = x
+            else:
+                for c in cset:
+                    g = np.arange(c, m, cols)
+                    for i in range(rows):
+                        d[g[i], g[(i + 1) % rows]] = x
+            coflows.append(Coflow(t, k, d))
+        edges = [(k, k + 1) for k in range(n_cf - 1)]
+        jobs.append(Job(t, coflows, edges,
+                        weight=float(rng.uniform(0.5, 2.0)), release=0))
+    return Instance(m, jobs)
+
+
+def run(seeds: int = 3) -> list[dict]:
+    rows = []
+    for regime, make in (("single_step", single_step_instance),
+                         ("multi_tenant", multi_tenant_instance)):
+        mk_gain, tw_gain, us = [], [], 0.0
+        for seed in range(seeds):
+            inst = make(seed)
+            (g, o), dt = timed(lambda: (
+                gdm(inst, beta=10.0, rng=np.random.default_rng(seed)),
+                om_alg(inst)))
+            us += dt
+            mk_gain.append(1 - g.makespan / o.makespan)
+            tw_gain.append(1 - g.twct() / o.twct())
+        emit(f"planner_{regime}", us / seeds,
+             f"makespan_gain_pct={100 * float(np.mean(mk_gain)):.1f};"
+             f"twct_gain_pct={100 * float(np.mean(tw_gain)):.1f}")
+        rows.append({"regime": regime,
+                     "makespan_gain": float(np.mean(mk_gain)),
+                     "twct_gain": float(np.mean(tw_gain))})
+    save_json("planner_ab", rows)
+    return rows

@@ -1,0 +1,138 @@
+"""§Roofline report: renders benchmarks/results/dryrun.json into the
+per-(arch x shape x mesh) three-term table, computes MODEL_FLOPS (analytic
+6*N*D / 2*N_active*D + attention terms) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, and names the dominant bottleneck."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.models.common import ArchConfig
+
+from .common import RESULTS, emit, save_json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analytic_params(cfg: ArchConfig) -> tuple[float, float]:
+    """(total, active) parameter counts from the config (transparent math,
+    no tracing)."""
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+
+    def attn():
+        p = d * hq * dh + 2 * d * hkv * dh + hq * dh * d
+        if cfg.qkv_bias:
+            p += hq * dh + 2 * hkv * dh
+        return p + d  # norm
+
+    def mlp_dense():
+        return 3 * d * cfg.d_ff + d
+
+    def moe():
+        s = cfg.moe
+        total = d * s.n_experts + s.n_experts * 3 * d * s.d_ff_expert + d
+        active = d * s.n_experts + s.top_k * 3 * d * s.d_ff_expert + d
+        return total, active
+
+    def mamba():
+        s = cfg.ssm
+        d_in = s.expand * d
+        H = d_in // s.d_head
+        gn = s.n_groups * s.d_state
+        conv_ch = d_in + 2 * gn
+        p = d * (2 * d_in + 2 * gn + H) + s.d_conv * conv_ch + conv_ch \
+            + 3 * H + d_in + d_in * d + d
+        return p
+
+    total = active = 0.0
+    for spec in cfg.period:
+        if spec.kind == "attn":
+            total += attn()
+            active += attn()
+        else:
+            total += mamba()
+            active += mamba()
+        if spec.mlp == "dense":
+            total += mlp_dense()
+            active += mlp_dense()
+        elif spec.mlp == "moe":
+            t, a = moe()
+            total += t
+            active += a
+    total *= cfg.n_periods
+    active *= cfg.n_periods
+    if cfg.family == "encdec":
+        enc = (attn() + mlp_dense()) * cfg.n_encoder_layers
+        dec_cross = (d * hq * dh + 2 * d * hkv * dh + hq * dh * d + d) * cfg.n_periods
+        total += enc + dec_cross
+        active += enc + dec_cross
+    emb = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    total += emb
+    active += emb
+    return total, active
+
+
+def model_flops_per_chip(cfg: ArchConfig, shape_name: str, chips: int) -> float:
+    """Useful FLOPs per chip per step: 6*N_active*D for training (fwd 2 +
+    bwd 4), 2*N_active*D forward-only for prefill, 2*N_active per token for
+    decode — plus the causal-attention term where attention exists."""
+    sh = SHAPES[shape_name]
+    S, B = sh.seq_len, sh.global_batch
+    total, active = analytic_params(cfg)
+    n_attn = sum(1 for s in cfg.period if s.kind == "attn") * cfg.n_periods
+    hq, dh = cfg.n_heads, cfg.d_head
+
+    if sh.kind == "train":
+        tokens = S * B
+        base = 6 * active * tokens
+        attn = 3 * n_attn * 4 * B * (S * S / 2) * hq * dh  # fwd+bwd(2x)
+    elif sh.kind == "prefill":
+        tokens = S * B
+        base = 2 * active * tokens
+        attn = n_attn * 4 * B * (S * S / 2) * hq * dh
+    else:  # decode: one token against an S-length cache
+        tokens = B
+        base = 2 * active * tokens
+        attn = n_attn * 4 * B * S * hq * dh
+    return (base + attn) / chips
+
+
+def render(dryrun_path: Path | None = None) -> list[dict]:
+    path = dryrun_path or (RESULTS / "dryrun.json")
+    cells = json.loads(path.read_text())
+    table = []
+    for r in cells:
+        if r.get("variant"):
+            continue
+        row = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+               "status": r["status"]}
+        if r["status"] == "ok":
+            chips = 512 if r["mesh"] == "2x16x16" else 256
+            cfg = get_config(r["arch"])
+            mf = model_flops_per_chip(cfg, r["shape"], chips)
+            hlo = r["cost"].get("flops", 0.0)
+            rf = r["roofline"]
+            row.update({
+                "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+                "collective_s": rf["collective_s"],
+                "bottleneck": rf["bottleneck"],
+                "model_flops_per_chip": mf,
+                "useful_ratio": mf / hlo if hlo else None,
+                "mem_gib": r["memory"].get("per_device_total_gib"),
+            })
+        elif r["status"] == "skipped":
+            row["reason"] = r.get("reason", "")
+        table.append(row)
+    save_json("roofline_table", table)
+    ok = [t for t in table if t["status"] == "ok"]
+    for t in sorted(ok, key=lambda t: (t["arch"], t["shape"], t["mesh"])):
+        if t["mesh"] == "16x16":
+            emit(f"roofline_{t['arch']}_{t['shape']}", 0.0,
+                 f"bottleneck={t['bottleneck'].replace('_s','')};"
+                 f"dom_s={max(t['compute_s'], t['memory_s'], t['collective_s']):.3f};"
+                 f"useful_ratio={t['useful_ratio'] and round(t['useful_ratio'], 3)}")
+    return table

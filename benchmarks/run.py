@@ -1,0 +1,76 @@
+"""Benchmark entry point — one function per paper table/figure plus the
+framework benchmarks. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run             # CI-sized (~15 min)
+  PYTHONPATH=src python -m benchmarks.run --standard  # m up to 150 (~2 h)
+  PYTHONPATH=src python -m benchmarks.run --paper     # published scale
+
+The committed `benchmarks/results/*.json` + `bench_standard.log` +
+`full_scale.json` hold the --standard and published-scale sweeps quoted in
+EXPERIMENTS.md; the default profile re-validates every benchmark at a
+CPU-minutes budget.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="(default profile)")
+    ap.add_argument("--standard", action="store_true")
+    ap.add_argument("--paper", action="store_true",
+                    help="published workload scale (longest)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: figs,online,beta,rsd,planner,kernels,roofline")
+    args = ap.parse_args()
+    args.fast = not (args.standard or args.paper)
+
+    if args.fast:
+        scale, seeds, ms, mus, factors = 0.12, 2, (10, 30, 50), (2, 5, 10), (2, 25)
+    elif args.paper:
+        scale, seeds, ms, mus, factors = 1.0, 3, (10, 30, 50, 100, 150), \
+            (2, 5, 10, 20), (1, 2, 10, 25, 100)
+    else:
+        scale, seeds, ms, mus, factors = 0.35, 2, (10, 30, 50, 100, 150), \
+            (2, 5, 10), (2, 10, 100)
+
+    want = set((args.only or "figs,online,beta,rsd,planner,kernels,roofline")
+               .split(","))
+    from . import common, kernels_bench, paper_figs, planner_ab, roofline_report
+
+    if "figs" in want:
+        paper_figs.workload_calibration(scale)
+        paper_figs.fig_a(rooted=False, scale=scale, seeds=seeds, ms=ms)
+        paper_figs.fig_a(rooted=True, scale=scale, seeds=seeds, ms=ms)
+        paper_figs.fig_b(rooted=False, scale=scale, seeds=seeds, mus=mus)
+        paper_figs.fig_b(rooted=True, scale=scale, seeds=seeds, mus=mus)
+    online_m = 150 if args.paper else 50
+    if "online" in want:
+        paper_figs.fig_c(rooted=False, scale=min(scale, 0.2), factors=factors,
+                         m=online_m)
+        paper_figs.fig_c(rooted=True, scale=min(scale, 0.2), factors=factors,
+                         m=online_m)
+    if "beta" in want:
+        paper_figs.fig4_beta(scale=min(scale, 0.25),
+                             ms=(30, 150) if not args.fast else (30,))
+    if "rsd" in want:
+        paper_figs.rsd(scale=min(scale, 0.15), m=50)
+    if "planner" in want:
+        planner_ab.run()
+    if "kernels" in want:
+        kernels_bench.run()
+    if "roofline" in want:
+        try:
+            roofline_report.render()
+        except FileNotFoundError:
+            print("roofline: dryrun.json missing (run repro.launch.dryrun --all)")
+    common.flush_csv()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import (CheckpointManager, latest_step, restore,  # noqa: F401
+                         save)

@@ -1,0 +1,19 @@
+"""qwen3-1.7b [dense]: 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936 — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf]."""
+from repro.models.common import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="qwen3-1.7b",
+    family="lm",
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=6144,
+    vocab=151936,
+    period=(LayerSpec("attn", "dense"),),
+    n_periods=28,
+    qk_norm=True,
+    rope_theta=1e6,
+    remat="full",
+)

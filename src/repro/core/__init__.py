@@ -1,0 +1,26 @@
+"""Core coflow-DAG scheduling library (Shafiee & Ghaderi 2020) — the paper's
+contribution, implemented faithfully: BNA, DMA, DMA-SRT, DMA-RT, the
+primal-dual job ordering, G-DM / G-DM-RT, the O(m)Alg baseline, backfilling,
+the online driver, and the paper's workload/verification machinery."""
+
+from .backfill import BackfillResult, backfill
+from .baseline import om_alg
+from .bna import bna, verify_bna_schedule
+from .dma import dma, isolated_job_unit
+from .dma_srt import dma_rt, dma_srt, path_subjobs, srt_start_times
+from .fsp_reduction import fsp_to_coflow_job
+from .gap_instance import (gap_bounds, gap_hand_schedule, gap_instance,
+                           gap_optimal_schedule_length)
+from .gdm import gdm, group_jobs
+from .online import OnlineResult, simulate_online
+from .ordering import OrderResult, job_order
+from .result import CompositeSchedule, Transcript, twct
+from .simulator import verify_schedule
+from .timeline import FinalSchedule, UnitSchedule, merge_and_fix
+from .traces import (PAPER_STATS, build_jobs, fb_like_coflows, paper_workload,
+                     poisson_releases, theta0, workload_stats)
+from .types import (Coflow, Instance, Job, aggregate_size, coflow_layers,
+                    critical_path_size, effective_size, is_rooted_tree,
+                    topological_order)
+
+__all__ = [name for name in dir() if not name.startswith("_")]

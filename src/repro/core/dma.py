@@ -1,0 +1,80 @@
+"""DMA — Delay-and-Merge Algorithm for general DAG jobs (paper Algorithm 2).
+
+Step 1: per job, topologically sort its coflows and schedule them
+        back-to-back, each optimally via BNA (the *isolated* schedule).
+Step 2: delay each isolated schedule by an integer chosen uniformly at
+        random in [0, Delta/beta], beta > 1/e.
+Steps 3-4: merge the delayed schedules and expand to feasibility
+        (merge_and_fix, Lemma 6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .bna import bna
+from .timeline import (EdgeIntervals, FinalSchedule, UnitSchedule,
+                       merge_and_fix, unit_from_coflow_plan)
+from .types import Coflow, Job, aggregate_size, topological_order
+
+__all__ = ["isolated_job_unit", "draw_delays", "dma", "cached_bna"]
+
+
+def cached_bna(c: Coflow) -> list:
+    """BNA decomposition memoized on the Coflow: G-DM, DMA-RT, O(m)Alg and
+    every beta point of a sweep share the same isolated schedules."""
+    pieces = getattr(c, "_bna_pieces", None)
+    if pieces is None:
+        pieces = bna(c.demand)
+        c._bna_pieces = pieces
+    return pieces
+
+
+def isolated_job_unit(job: Job, start: int = 0) -> UnitSchedule:
+    """Step 1: feasible isolated schedule — coflows back-to-back in
+    topological order, each scheduled optimally by BNA (Lemma 1)."""
+    order = topological_order(job.mu, job.edges)
+    t = start
+    parts: list[UnitSchedule] = []
+    for cid in order:
+        c = job.coflows[cid]
+        pieces = cached_bna(c)
+        u = unit_from_coflow_plan(job.jid, cid, c.demand, pieces, t)
+        parts.append(u)
+        t += c.D
+    edges = EdgeIntervals.concat([p.edges for p in parts]).with_owner(job.jid)
+    ledger = [e for p in parts for e in p.ledger]
+    return UnitSchedule(uid=job.jid, edges=edges, ledger=ledger)
+
+
+def draw_delays(
+    uids: list[int], delta: int, beta: float, rng: np.random.Generator | None,
+) -> dict[int, int]:
+    """Step 2 delays: uniform integers in [0, Delta/beta]. rng=None selects
+    the deterministic 'spread' mode (evenly spaced — a practical stand-in for
+    the de-randomization of §IV-C; documented, off by default)."""
+    hi = int(delta // beta)
+    if rng is None:
+        k = max(len(uids), 1)
+        return {uid: (i * hi) // max(k - 1, 1) if k > 1 else 0
+                for i, uid in enumerate(uids)}
+    return {uid: int(rng.integers(0, hi + 1)) for uid in uids}
+
+
+def dma(
+    jobs: list[Job],
+    m: int,
+    beta: float = 2.0,
+    rng: np.random.Generator | None = None,
+    origin: int = 0,
+    decompose: bool = False,
+    use_kernel: bool = False,
+) -> FinalSchedule:
+    """Schedule a set of general-DAG jobs; makespan O(mu * g(m)) x OPT whp
+    (Theorem 2)."""
+    if rng is None:
+        rng = np.random.default_rng(0)
+    units = [isolated_job_unit(j) for j in jobs]
+    delta = aggregate_size(c.demand for j in jobs for c in j.coflows)
+    delays = draw_delays([j.jid for j in jobs], delta, beta, rng)
+    return merge_and_fix(units, m, delays, origin=origin,
+                         decompose=decompose, use_kernel=use_kernel)

@@ -1,0 +1,95 @@
+"""G-DM and G-DM-RT — total weighted completion time minimization
+(paper Algorithm 4, §VI).
+
+1. Order jobs with the combinatorial primal-dual Algorithm 5.
+2. D_j = effective size of the aggregate coflow of the first j jobs in that
+   order; T_j = critical path size; rho_j = release time.
+3. Partition jobs into groups J_b by which geometric interval
+   (gamma 2^{b-1}, gamma 2^b] contains T_j + rho_j + D_j.
+4. Schedule the groups in order; group b starts once the previous group is
+   done AND all its jobs have arrived; each group is scheduled by DMA
+   (general DAGs) or DMA-RT (rooted trees).
+
+Approximation: O(mu g(m)) for general DAGs (Theorem 5);
+O(sqrt(mu) g(m) h(m, mu)) for rooted trees (Corollary 1).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .dma import dma
+from .dma_srt import dma_rt
+from .ordering import job_order
+from .result import CompositeSchedule
+from .types import Instance, effective_size
+
+__all__ = ["gdm", "group_jobs"]
+
+
+def group_jobs(instance: Instance, order: list[int]) -> list[list[int]]:
+    """Steps 2-3: geometric grouping by T_j + rho_j + D_j (prefix aggregate).
+
+    Returns groups as lists of job ids, in increasing b; empty groups are
+    dropped (they contribute nothing to the schedule)."""
+    by_id = {j.jid: j for j in instance.jobs}
+    m = instance.m
+    gamma = instance.gamma()
+    agg = np.zeros((m, m), dtype=np.int64)
+    keys: dict[int, float] = {}
+    for jid in order:
+        job = by_id[jid]
+        agg += job.aggregate_demand()
+        D_j = effective_size(agg)
+        keys[jid] = job.T + job.release + D_j
+    groups: dict[int, list[int]] = {}
+    for jid in order:
+        key = keys[jid]
+        if key <= 0:
+            b = 0
+        else:
+            # smallest b >= 0 with key <= gamma * 2^b
+            b = max(0, math.ceil(math.log2(key / gamma)))
+            while gamma * (2 ** b) < key:  # float-log guard
+                b += 1
+            while b > 0 and gamma * (2 ** (b - 1)) >= key:
+                b -= 1
+        groups.setdefault(b, []).append(jid)
+    return [groups[b] for b in sorted(groups)]
+
+
+def gdm(
+    instance: Instance,
+    beta: float = 2.0,
+    rng: np.random.Generator | None = None,
+    rooted: bool = False,
+    decompose: bool = False,
+    use_kernel: bool = False,
+    nested: bool = True,
+) -> CompositeSchedule:
+    """G-DM (rooted=False) / G-DM-RT (rooted=True)."""
+    if rng is None:
+        rng = np.random.default_rng(0)
+    by_id = {j.jid: j for j in instance.jobs}
+    res = job_order(instance)
+    groups = group_jobs(instance, res.order)
+    parts = []
+    t_cur = 0
+    for g in groups:
+        jobs = [by_id[jid] for jid in g]
+        start = max(t_cur, max((j.release for j in jobs), default=0))
+        if rooted:
+            sub = dma_rt(jobs, instance.m, beta=beta, rng=rng,
+                         origin=int(start), decompose=decompose,
+                         use_kernel=use_kernel, nested=nested)
+        else:
+            sub = dma(jobs, instance.m, beta=beta, rng=rng,
+                      origin=int(start), decompose=decompose,
+                      use_kernel=use_kernel)
+        parts.append(sub)
+        t_cur = int(math.ceil(sub.makespan))
+    return CompositeSchedule(parts, instance, meta={
+        "order": res.order, "groups": groups, "algorithm": "G-DM-RT" if rooted else "G-DM",
+        "beta": beta,
+    })

@@ -1,0 +1,88 @@
+"""Schedule verification — the invariants every algorithm must satisfy.
+
+Used by unit/property tests: (i) per-coflow demand conservation through the
+ledger, (ii) Starts-After precedence, (iii) release times, (iv) packet-level
+validity of decompositions (matchings, time-disjoint, aggregate-conserving).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .result import CompositeSchedule
+from .timeline import FinalSchedule
+from .types import Instance
+
+__all__ = ["verify_schedule", "verify_decomposition"]
+
+
+def verify_schedule(instance: Instance, sched: CompositeSchedule | FinalSchedule,
+                    check_packets: bool | None = None) -> None:
+    parts = sched.parts if isinstance(sched, CompositeSchedule) else [sched]
+    by_job = {j.jid: j for j in instance.jobs}
+
+    # gather ledger per coflow
+    per: dict[tuple[int, int], list] = {}
+    for p in parts:
+        for e in p.ledger:
+            per.setdefault((e.jid, e.cid), []).append(e)
+
+    for j in instance.jobs:
+        for c in j.coflows:
+            key = (j.jid, c.cid)
+            entries = per.get(key, [])
+            assert entries, f"coflow {key} never scheduled"
+            # (i) conservation: ledger units == demand, edge by edge
+            got = np.zeros_like(c.demand, dtype=np.float64)
+            for e in entries:
+                if e.units.size:
+                    np.add.at(got, (e.srcs, e.dsts), e.units)
+            assert np.allclose(got, c.demand), f"conservation violated for {key}"
+            # (iii) release
+            t0 = min(e.e0 for e in entries)
+            assert t0 >= j.release - 1e-6, f"coflow {key} starts before release"
+
+    # (ii) precedence through ledger windows
+    for j in instance.jobs:
+        comp = {}
+        start = {}
+        for c in j.coflows:
+            es = per[(j.jid, c.cid)]
+            comp[c.cid] = max(e.e1 for e in es)
+            start[c.cid] = min(e.e0 for e in es)
+        for a, b in j.edges:
+            assert start[b] >= comp[a] - 1e-6, (
+                f"precedence violated: job {j.jid}: {a} -> {b} "
+                f"(start {start[b]} < parent end {comp[a]})")
+
+    # (iv) packet level, when a decomposition is present
+    for p in parts:
+        if p.decomposition is not None:
+            verify_decomposition(p)
+    if check_packets:
+        assert any(p.decomposition is not None for p in parts), \
+            "packet check requested but no decomposition present"
+
+    # aggregate conservation at packet level across the whole composite
+    if all(p.decomposition is not None for p in parts):
+        m = instance.m
+        total = np.zeros((m, m), dtype=np.int64)
+        for j in instance.jobs:
+            for c in j.coflows:
+                total += c.demand
+        moved = np.zeros((m, m), dtype=np.int64)
+        for p in parts:
+            for piece in p.decomposition:
+                np.add.at(moved, (piece.srcs, piece.dsts), piece.dur)
+        assert (moved == total).all(), "packet-level aggregate conservation violated"
+
+
+def verify_decomposition(p: FinalSchedule) -> None:
+    """Every piece a matching; pieces time-disjoint (unit port capacity)."""
+    pieces = sorted(p.decomposition, key=lambda x: x.t0)
+    prev_end = -np.inf
+    for x in pieces:
+        assert x.dur > 0
+        assert len(np.unique(x.srcs)) == x.srcs.size, "sender used twice in a slot"
+        assert len(np.unique(x.dsts)) == x.dsts.size, "receiver used twice in a slot"
+        assert x.t0 >= prev_end, "pieces overlap in time"
+        prev_end = x.t0 + x.dur

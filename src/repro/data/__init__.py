@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticTokens, make_batch_specs  # noqa: F401

@@ -1,0 +1,117 @@
+"""Deterministic synthetic data pipeline.
+
+Tokens are a pure function of (seed, step, row) via JAX's threefry — so any
+worker can regenerate any batch: resume-after-failure and elastic re-sharding
+need no data-loader state beyond the step counter, and straggler
+re-assignment is a pure re-index. Host-sharded feeding: each dp shard asks
+for rows [lo, hi) of the global batch.
+
+For the paper's kind of multi-stage data-parallel jobs this mirrors the
+deterministic shuffle+shard stage of a production loader; real corpora plug
+in behind the same `batch_at(step)` interface.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig
+
+__all__ = ["DataConfig", "SyntheticTokens", "make_batch_specs"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+class SyntheticTokens:
+    """Deterministic LM token stream (documents of geometric length packed
+    with an EOS separator, so the distribution is not trivially uniform)."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig):
+        self.cfg = cfg
+        self.data = data
+
+    def batch_at(self, step: int, lo: int = 0, hi: int | None = None) -> dict:
+        d = self.data
+        hi = d.global_batch if hi is None else hi
+        rows = hi - lo
+        key = jax.random.fold_in(jax.random.PRNGKey(d.seed), step)
+        keys = jax.random.split(key, d.global_batch)[lo:hi]
+        toks = jax.vmap(self._row)(keys)
+        batch = {"tokens": toks, "labels": self._labels(toks)}
+        if self.cfg.family == "vlm":
+            n_img = self.cfg.n_image_tokens
+            pk = jax.random.fold_in(key, 7)
+            batch = {
+                "patches": jax.random.normal(
+                    pk, (rows, n_img, self.cfg.d_model), jnp.float32) * 0.02,
+                "tokens": toks,
+                "labels": self._labels(toks),
+            }
+        elif self.cfg.family == "encdec":
+            fk = jax.random.fold_in(key, 9)
+            batch = {
+                "frames": jax.random.normal(
+                    fk, (rows, self.cfg.encoder_seq, self.cfg.d_model),
+                    jnp.float32) * 0.02,
+                "tokens": toks,
+                "labels": self._labels(toks),
+            }
+        return batch
+
+    def _row(self, key: jax.Array) -> jax.Array:
+        """Markov-structured stream: with prob. 1/2 the next token is a fixed
+        affine function of the current one, else fresh — so the corpus has
+        ~0.5 bit/token of learnable structure (loss visibly decreases in
+        integration tests) while staying a pure function of (seed, step, row).
+        EOS(0) at ~1/64 emulates packed short documents."""
+        d, v = self.data, self.cfg.vocab
+        fresh = jax.random.randint(key, (d.seq_len,), 1, v)
+        copy_gate = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5,
+                                         (d.seq_len,))
+
+        def step(prev, inp):
+            f, g = inp
+            nxt = jnp.where(g, (prev * 31 + 7) % (v - 1) + 1, f)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step, fresh[0], (fresh, copy_gate))
+        gates = jax.random.bernoulli(jax.random.fold_in(key, 1),
+                                     1.0 / 64, (d.seq_len,))
+        return jnp.where(gates, 0, toks)
+
+    @staticmethod
+    def _labels(tokens: jax.Array) -> jax.Array:
+        return jnp.concatenate(
+            [tokens[:, 1:], jnp.full((tokens.shape[0], 1), -1, tokens.dtype)],
+            axis=1)
+
+
+def make_batch_specs(cfg: ArchConfig, seq_len: int, global_batch: int) -> dict:
+    """ShapeDtypeStruct stand-ins for a training batch (dry-run input)."""
+    f = jax.ShapeDtypeStruct
+    base = {
+        "tokens": f((global_batch, seq_len), jnp.int32),
+        "labels": f((global_batch, seq_len), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        text = seq_len - cfg.n_image_tokens
+        base = {
+            "patches": f((global_batch, cfg.n_image_tokens, cfg.d_model), jnp.float32),
+            "tokens": f((global_batch, text), jnp.int32),
+            "labels": f((global_batch, text), jnp.int32),
+        }
+    elif cfg.family == "encdec":
+        base = {
+            "frames": f((global_batch, cfg.encoder_seq, cfg.d_model), jnp.float32),
+            "tokens": f((global_batch, seq_len), jnp.int32),
+            "labels": f((global_batch, seq_len), jnp.int32),
+        }
+    return base

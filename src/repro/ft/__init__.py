@@ -1,0 +1,1 @@
+from .runner import FTConfig, StragglerMonitor, TrainRunner  # noqa: F401

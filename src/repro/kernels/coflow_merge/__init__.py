@@ -1,0 +1,1 @@
+from .ops import interval_alphas  # noqa: F401

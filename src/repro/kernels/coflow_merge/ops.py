@@ -1,0 +1,40 @@
+"""Public wrapper for coflow_merge: scatter the edge activations into the
+delta array, pad to kernel tiles, dispatch (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import default_interpret
+from .coflow_merge import coflow_merge_padded
+from .ref import alphas_ref, build_delta
+
+
+def interval_alphas(
+    si: np.ndarray,   # (E,) start interval index per edge activation
+    ei: np.ndarray,   # (E,) end interval index (exclusive)
+    s: np.ndarray,    # (E,) sender port
+    r: np.ndarray,    # (E,) receiver port
+    K: int,
+    m: int,
+    *,
+    block_k: int = 1024,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> np.ndarray:
+    """alpha_t per merged interval (DMA Steps 3-4)."""
+    if K <= 0:
+        return np.zeros(0, dtype=np.int64)
+    if interpret is None:
+        interpret = default_interpret()
+    delta = build_delta(jnp.asarray(si), jnp.asarray(ei), jnp.asarray(s),
+                        jnp.asarray(r), K, m)
+    if not use_kernel:
+        return np.asarray(alphas_ref(delta), dtype=np.int64)
+    bk = min(block_k, max(8, 1 << (K - 1).bit_length()))
+    k_pad = (-K) % bk
+    p_pad = (-delta.shape[1]) % 128
+    dpad = jnp.pad(delta, ((0, k_pad), (0, p_pad)))
+    out = coflow_merge_padded(dpad, block_k=bk, interpret=interpret)
+    return np.asarray(out[:K, 0], dtype=np.int64)

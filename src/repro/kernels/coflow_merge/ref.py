@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for coflow_merge: running prefix-sum of per-port count
+deltas down the interval axis, then the per-interval max over ports —
+alpha_t of DMA Steps 3-4 (the quantity Lemma 4 bounds)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def alphas_ref(delta: jnp.ndarray) -> jnp.ndarray:
+    """delta: (K, 2m) int32 count deltas (+1 at interval where an edge-port
+    activation starts, -1 where it ends). Returns (K,) int32 alphas."""
+    counts = jnp.cumsum(delta, axis=0)
+    return counts.max(axis=1).astype(jnp.int32)
+
+
+def build_delta(si, ei, s, r, K: int, m: int) -> jnp.ndarray:
+    """Scatter edge activations into the (K, 2m) delta array."""
+    delta = jnp.zeros((K + 1, 2 * m), dtype=jnp.int32)
+    delta = delta.at[si, s].add(1).at[ei, s].add(-1)
+    delta = delta.at[si, m + r].add(1).at[ei, m + r].add(-1)
+    return delta[:K]

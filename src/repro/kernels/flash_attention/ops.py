@@ -1,0 +1,57 @@
+"""Public wrapper for the flash_attention kernel: padding to MXU-aligned
+block shapes, block-size selection, interpret-mode dispatch, ref fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_interpret
+from .flash_attention import flash_attention_padded
+from .ref import attention_ref
+
+
+def _round_up(x: int, k: int) -> int:
+    return (x + k - 1) // k * k
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Hq, Sq, d)
+    k: jax.Array,   # (B, Hkv, Sk, d)
+    v: jax.Array,   # (B, Hkv, Sk, d)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Blocked attention; exact (same math as ref, different blocking)."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    if scale is None:
+        scale = float(d) ** -0.5
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    if interpret is None:
+        interpret = default_interpret()
+
+    bq = min(block_q, _round_up(Sq, 8))
+    bk = min(block_k, _round_up(Sk, 8))
+    sq_p = _round_up(Sq, bq)
+    sk_p = _round_up(Sk, bk)
+    d_p = _round_up(d, 128)
+
+    def pad(x, s_to, d_to):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, s_to - x.shape[2]), (0, d_to - x.shape[3])))
+
+    qp = pad(q, sq_p, d_p)
+    kp = pad(k, sk_p, d_p)
+    vp = pad(v, sk_p, d_p)
+    # NOTE on causal + padded queries: padded query rows attend to key block 0
+    # after masking (all-masked rows produce zeros via the l==0 guard).
+    out = flash_attention_padded(
+        qp, kp, vp, scale=scale, causal=causal, block_q=bq, block_k=bk,
+        seq_k=Sk, causal_offset=Sk - Sq, interpret=interpret)
+    return out[:, :, :Sq, :d]

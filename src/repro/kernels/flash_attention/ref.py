@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash_attention: exact softmax GQA attention in f32."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d); GQA by head repetition."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), dtype=bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Public wrapper for the SSD scan kernel: chunk-padding, interpret switch,
+ref fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_interpret
+from .ref import ssd_ref
+from .ssd_scan import ssd_scan_padded
+
+
+def ssd_scan(
+    x: jax.Array,    # (B, S, H, P)
+    a: jax.Array,    # (B, S, H) decay in (0, 1]
+    b: jax.Array,    # (B, S, G, N)
+    c: jax.Array,    # (B, S, G, N)
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return ssd_ref(x, a, b, c)
+    if interpret is None:
+        interpret = default_interpret()
+    B, S, H, P = x.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # padded steps use decay 1 (log 0) and zero inputs: state unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    loga = jnp.log(jnp.maximum(a.astype(jnp.float32), 1e-37))
+    out = ssd_scan_padded(x, loga, b, c, chunk=L, interpret=interpret)
+    return out[:, :S]

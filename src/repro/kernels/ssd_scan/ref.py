@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: the exact sequential recurrence.
+
+State h_t (N, P) per (batch, head):
+    h_t = a_t * h_{t-1} + b_t (N,) outer x_t (P,)
+    y_t = c_t . h_t   (contract N)
+
+a: per-head scalar decay in (0, 1]; b, c shared across heads within a state
+group (n_groups, GQA-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, a, b, c):
+    """x: (B, S, H, P); a: (B, S, H); b, c: (B, S, G, N). Returns (B, S, H, P)."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bf = jnp.repeat(b.astype(jnp.float32), rep, axis=2)  # (B, S, H, N)
+    cf = jnp.repeat(c.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        h = at[..., None, None] * h + bt[..., :, None] * xt[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_decode_step(h, x_t, a_t, b_t, c_t):
+    """Single-token recurrence for serving. h: (B, H, N, P)."""
+    rep = h.shape[1] // b_t.shape[1]
+    bt = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)
+    ct = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    h = a_t.astype(jnp.float32)[..., None, None] * h \
+        + bt[..., :, None] * x_t.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+    return h, y.astype(x_t.dtype)

@@ -1,0 +1,447 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+# the production mesh (16x16 single pod / 2x16x16 multi-pod) with
+# ShapeDtypeStruct inputs — zero allocation — and extract the roofline terms
+# from the compiled artifact.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--out f.json]
+#
+# The XLA_FLAGS assignment above MUST stay the first statement: jax locks
+# the device count at first backend init (hence no module docstring).
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.dist.partition import (batch_pspecs, dp_axes, param_pspecs,
+                                  shardings)
+from repro.launch.mesh import make_production_mesh, mesh_rules
+from repro.launch.specs import abstract_cache, abstract_params, abstract_state, input_specs
+from repro.models.sharding import mesh_context
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+# --- TPU v5e roofline constants (targets; this container is CPU-only) -----
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes of every collective op in the compiled (post-SPMD)
+    module, bucketed by op kind. Post-optimization HLO annotates types on
+    the RESULT, so we size the result tensor(s): exact for all-reduce /
+    collective-permute / all-to-all (result == operand), the gathered size
+    for all-gather, the post-reduce shard for reduce-scatter — a consistent
+    per-chip traffic proxy (documented in EXPERIMENTS.md)."""
+    out: dict[str, float] = {}
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1)
+        lhs = line[: m.start(1)]
+        total = 0.0
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + total
+        n_ops += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["n_ops"] = n_ops
+    return out
+
+
+def _cache_pspecs(cfg, mesh, batch: int, seq_shard: bool,
+                  layout: str = "heads"):
+    """Decode-cache partition specs. seq_shard=True (long_500k, batch 1)
+    shards the KV/conv sequence axis on "data" (SP) instead of batch.
+
+    layout="heads": KV sharded on the kv-head dim (baseline; replicates
+      when n_kv_heads < TP, which GSPMD then gathers — the collective-bound
+      decode baseline in §Perf).
+    layout="dh": KV sharded on the HEAD-DIM axis (always TP-divisible);
+      q@k contracts over the sharded axis into small partial-score
+      all-reduces instead of gathering the cache (§Perf hillclimb)."""
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    bdim = dp if batch % max(dp_total, 1) == 0 and batch >= dp_total else None
+
+    def leaf_spec(path_leaf):
+        path, leaf = path_leaf
+        nd = len(leaf.shape)
+        name = path[-1]
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            # (nP, B, S, Hkv, dh)
+            if layout == "dh":
+                return P(None, None if seq_shard else bdim,
+                         "data" if seq_shard else None, None, "model")
+            if layout == "seq":
+                return P(None, None if seq_shard else bdim, "model", None, None)
+            return P(None, None if seq_shard else bdim,
+                     "data" if seq_shard else None, "model", None)
+        if name == "h":     # (nP, B, H, N, P)
+            return P(None, bdim, "model", None, None)
+        if name == "conv":  # (nP, B, K-1, C)
+            return P(None, bdim, None, "model")
+        if name == "length":
+            return P()
+        return P(*([None] * nd))
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return leaf_spec((path, tree))
+
+    return walk
+
+
+def build_cell(cfg, shape_name: str, mesh, variant: dict | None = None):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    variant = variant or {}
+    cfg = cfg.replace(**variant.get("config", {}))
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    rules = mesh_rules(mesh)
+    params_abs = abstract_params(cfg)
+    p_pspecs = param_pspecs(params_abs, moe_ffn_tp=variant.get("moe_ffn_tp", False))
+    p_sh = shardings(p_pspecs, mesh)
+    dp = dp_axes(mesh)
+
+    if shape.kind == "train":
+        from repro.train.optim import OptConfig
+        from repro.train.step import build_train_step
+
+        state_abs = abstract_state(cfg)
+        st_pspecs = {
+            "params": p_pspecs,
+            "opt": {"m": p_pspecs, "v": p_pspecs, "step": P()},
+            "step": P(),
+        }
+        if variant.get("zero"):
+            from repro.dist.partition import zero_pspecs
+            zp = zero_pspecs(params_abs, mesh)
+            st_pspecs["opt"]["m"] = zp
+            st_pspecs["opt"]["v"] = zp
+        st_sh = shardings(st_pspecs, mesh)
+        b_sh = jax.tree.map(lambda _: NamedSharding(mesh, P(dp)), specs["batch"])
+        step = build_train_step(
+            cfg, OptConfig(), micro_steps=variant.get("micro_steps", 1),
+            bucket_order=variant.get("bucket_order"),
+            grad_compression=variant.get("grad_compression", False))
+
+        def fn(state, batch):
+            with mesh_context(mesh, rules):
+                return step(state, batch)
+
+        # TrainState is a pytree; pass shardings via matching pytree
+        from repro.train.step import TrainState
+        st_sh_tree = TrainState(params=st_sh["params"], opt=st_sh["opt"],
+                                step=st_sh["step"])
+        return fn, (state_abs, specs["batch"]), (st_sh_tree, b_sh), (st_sh_tree, None)
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            from repro.models import encdec_prefill
+
+            def fn(params, frames, tokens):
+                with mesh_context(mesh, rules):
+                    return encdec_prefill(cfg, params, frames, tokens,
+                                          capacity=shape.seq_len)
+            args = (params_abs, specs["frames"], specs["tokens"])
+            in_sh = (p_sh, NamedSharding(mesh, P(dp)), NamedSharding(mesh, P(dp)))
+        elif cfg.family == "vlm":
+            from repro.models import vlm_prefill
+
+            def fn(params, patches, tokens):
+                with mesh_context(mesh, rules):
+                    return vlm_prefill(cfg, params, patches, tokens)
+            args = (params_abs, specs["patches"], specs["tokens"])
+            in_sh = (p_sh, NamedSharding(mesh, P(dp)), NamedSharding(mesh, P(dp)))
+        else:
+            from repro.models import prefill
+
+            def fn(params, tokens):
+                with mesh_context(mesh, rules):
+                    return prefill(cfg, params, tokens)
+            args = (params_abs, specs["tokens"])
+            in_sh = (p_sh, NamedSharding(mesh, P(dp)))
+        return fn, args, in_sh, None
+
+    # decode
+    seq_shard = shape.global_batch == 1
+    cache_abs = specs["cache"]
+    c_pspecs = _cache_pspecs(cfg, mesh, shape.global_batch, seq_shard,
+                             layout=variant.get("cache_layout", "heads"))(cache_abs)
+    c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    tok_sh = NamedSharding(
+        mesh, P(dp if shape.global_batch > 1 else None, None))
+    if cfg.family == "encdec":
+        from repro.models import encdec_decode_step
+        fn_raw = lambda params, cache, token: encdec_decode_step(cfg, params, cache, token)
+    else:
+        from repro.models import decode_step
+        fn_raw = lambda params, cache, token: decode_step(cfg, params, cache, token)
+
+    def fn(params, cache, token):
+        with mesh_context(mesh, rules):
+            return fn_raw(params, cache, token)
+
+    return (fn, (params_abs, cache_abs, specs["token"]),
+            (p_sh, c_sh, tok_sh), (None, c_sh))
+
+
+def _sanitize_shardings(sh_tree, abs_tree, mesh):
+    """Drop sharding axes that do not divide the corresponding dim (jit arg
+    shardings require exact divisibility; e.g. 4 kv-head caches cannot split
+    a 16-way model axis — those dims fall back to replication)."""
+    def fix(sh, ab):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        dims = list(sh.spec) + [None] * (len(ab.shape) - len(sh.spec))
+        out = []
+        for i, ax in enumerate(dims):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            out.append(ax if ab.shape[i] % size == 0 else None)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fix, sh_tree, abs_tree)
+
+
+def _compile_cell(cfg, shape_name, mesh, variant):
+    fn, args, in_sh, out_sh = build_cell(cfg, shape_name, mesh, variant)
+    in_sh = tuple(_sanitize_shardings(s, a, mesh) for s, a in zip(in_sh, args))
+    if out_sh is not None:
+        out_eval = jax.eval_shape(fn, *args)
+        out_sh = tuple(
+            _sanitize_shardings(s, a, mesh) if s is not None else None
+            for s, a in zip(out_sh, out_eval))
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    return lowered.compile()
+
+
+def _extract_cost(compiled) -> dict:
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k in ("flops", "bytes accessed", "transcendentals"):
+            if k in ca:
+                cost[k] = float(ca[k])
+    except Exception as e:
+        cost["error"] = str(e)
+    return cost
+
+
+def _numeric_extrapolate(base: dict, plus: list[tuple[dict, int]]) -> dict:
+    """base = depth-1 metrics; plus = [(depth-2 metrics, extra_repeats)]:
+    result = base + sum(extra_repeats * (d2 - base)) per numeric key.
+    Per-kind values are clamped at 0 (the partitioner can legitimately swap
+    e.g. an all-gather at depth 1 for a reduce-scatter at depth 2; only the
+    clamped per-kind split and the recomputed total are reported)."""
+    out = dict(base)
+    for d2, extra in plus:
+        for k, v in d2.items():
+            if isinstance(v, (int, float)) and isinstance(base.get(k), (int, float)):
+                out[k] = out.get(k, 0.0) + extra * (v - base[k])
+    out = {k: max(v, 0.0) for k, v in out.items()
+           if isinstance(v, (int, float))}
+    if "total" in out:
+        out["total"] = sum(v for k, v in out.items()
+                           if k not in ("total", "n_ops"))
+    return out
+
+
+def cost_probe(cfg, shape_name: str, mesh, variant: dict | None) -> tuple[dict, dict]:
+    """Loop-aware HLO cost: XLA's cost_analysis counts a `while` body once,
+    so lowering the same step at stack depth 1 and 2 and extrapolating
+    linearly reconstructs the full-depth cost EXACTLY for scan-structured
+    programs (validated in tests against an unrolled small model). Cost
+    probes force loop-free attention (einsum ref — same FLOPs as the
+    blocked kernel) and unchunked loss; memory/HLO text still come from the
+    full production compile in run_cell."""
+    base_over = {"attn_impl": "chunked", "loss_chunk": 0, "scan_unroll": True}
+    variant = dict(variant or {})
+    variant.pop("micro_steps", None)  # same total flops; avoids the acc loop
+
+    def probe(npd, nenc):
+        c = cfg.replace(n_periods=npd, **base_over)
+        if nenc is not None:
+            c = c.replace(n_encoder_layers=nenc)
+        compiled = _compile_cell(c, shape_name, mesh, variant)
+        return _extract_cost(compiled), collective_bytes(compiled.as_text())
+
+    if cfg.family == "encdec":
+        (c11, k11) = probe(1, 1)
+        (c21, k21) = probe(2, 1)
+        (c12, k12) = probe(1, 2)
+        cost = _numeric_extrapolate(
+            c11, [(c21, cfg.n_periods - 1), (c12, cfg.n_encoder_layers - 1)])
+        coll = _numeric_extrapolate(
+            k11, [(k21, cfg.n_periods - 1), (k12, cfg.n_encoder_layers - 1)])
+    else:
+        (c1, k1) = probe(1, None)
+        (c2, k2) = probe(2, None)
+        cost = _numeric_extrapolate(c1, [(c2, cfg.n_periods - 1)])
+        coll = _numeric_extrapolate(k1, [(k2, cfg.n_periods - 1)])
+    return cost, coll
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             variant: dict | None = None, verbose: bool = True,
+             probe_cost: bool = True) -> dict:
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if variant and "config" in variant:
+        cfg = cfg.replace(**variant["config"])
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape_name, mesh, variant)
+    t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem[k] = int(getattr(ma, k, 0) or 0)
+        mem["per_device_total_gib"] = round(
+            (mem.get("argument_size_in_bytes", 0)
+             + mem.get("temp_size_in_bytes", 0)) / 2 ** 30, 3)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    cost_raw = _extract_cost(compiled)
+    text = compiled.as_text()
+    coll_raw = collective_bytes(text)
+
+    if probe_cost and cfg.n_periods > 1:
+        t0 = time.time()
+        cost, coll = cost_probe(cfg, shape_name, mesh, variant)
+        t_probe = time.time() - t0
+    else:
+        cost, coll, t_probe = cost_raw, coll_raw, 0.0
+
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "variant": {k: v for k, v in (variant or {}).items() if k != "bucket_order"},
+        "compile_s": round(t_compile, 2), "probe_s": round(t_probe, 2),
+        "memory": mem,
+        "cost": cost, "cost_raw_loop_once": cost_raw,
+        "collectives": coll, "collectives_raw_loop_once": coll_raw,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll.get("total", 0.0) / ICI_BW,
+        },
+    }
+    r = res["roofline"]
+    r["bottleneck"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda k: r[k])
+    if verbose:
+        print(json.dumps(res, indent=None, default=str))
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR / "dryrun.json"))
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape, False))
+                if not args.single_pod_only:
+                    cells.append((arch, shape, True))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    def key(r):
+        return (r["arch"], r["shape"], r["mesh"], json.dumps(r.get("variant", {}), sort_keys=True))
+
+    done = {key(r) for r in results if r.get("status") in ("ok", "skipped")}
+    for arch, shape, mp in cells:
+        k = (arch, shape, "2x16x16" if mp else "16x16", "{}")
+        if k in done:
+            print(f"cached: {k}")
+            continue
+        print(f"=== {arch} x {shape} x {'2x16x16' if mp else '16x16'} ===", flush=True)
+        try:
+            res = run_cell(arch, shape, multi_pod=mp)
+        except Exception:
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "trace": traceback.format_exc()[-2000:]}
+            print(res["trace"], flush=True)
+        results = [r for r in results if key(r) != key({**res, "variant": {}})]
+        results.append(res)
+        out_path.write_text(json.dumps(results, indent=1, default=str))
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

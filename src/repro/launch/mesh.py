@@ -1,0 +1,22 @@
+"""Production mesh construction. A FUNCTION (not module-level state) so
+importing this never touches jax device initialization."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_rules"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods of
+    256 = 512 chips (pod, data, model) — the dry-run proves the "pod" axis
+    shards (DP across pods over DCN-class links)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_rules(mesh) -> dict:
+    """Logical-axis rules for repro.models.sharding.mesh_context."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return {"dp": dp, "model": ("model",), "sp": ("data",)}

@@ -1,0 +1,76 @@
+"""input_specs(): weak-type-correct ShapeDtypeStruct stand-ins for every
+model input of every (arch x shape) cell — shardable, zero allocation.
+Also builds the abstract TrainState / caches the dry-run lowers against."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec, SHAPES, get_config
+from repro.data.pipeline import make_batch_specs
+from repro.models import ArchConfig
+from repro.models.common import DTYPES
+
+__all__ = ["input_specs", "abstract_state", "abstract_cache"]
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def abstract_state(cfg: ArchConfig):
+    """Abstract TrainState via eval_shape (no allocation)."""
+    from repro.train.step import init_train_state
+
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_params(cfg: ArchConfig):
+    from repro.train.step import init_params
+
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, capacity: int):
+    if cfg.family == "encdec":
+        from repro.models import init_encdec_cache
+
+        return jax.eval_shape(
+            lambda: init_encdec_cache(cfg, batch, capacity))
+    from repro.models import init_decode_cache
+
+    return jax.eval_shape(lambda: init_decode_cache(cfg, batch, capacity))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec | str) -> dict:
+    """The step inputs for one cell.
+
+    train:   {"batch": {tokens/labels/patches/frames...}}
+    prefill: {"tokens": ..., (+ "frames"/"patches")}
+    decode:  {"cache": <abstract cache at seq_len capacity>, "token": (B, 1)}
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    S, B = shape.seq_len, shape.global_batch
+    f = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        return {"batch": make_batch_specs(cfg, S, B)}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": f((B, cfg.encoder_seq, cfg.d_model), jnp.float32),
+                "tokens": f((B, S), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            return {
+                "patches": f((B, cfg.n_image_tokens, cfg.d_model), jnp.float32),
+                "tokens": f((B, S - cfg.n_image_tokens), jnp.int32),
+            }
+        return {"tokens": f((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-capacity cache
+    return {
+        "cache": abstract_cache(cfg, B, S),
+        "token": f((B, 1), jnp.int32),
+    }

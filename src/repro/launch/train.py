@@ -1,0 +1,62 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+--smoke trains the reduced same-family config on CPU (the end-to-end
+driver used by examples/ and the integration tests); full configs are for
+real accelerators (the dry-run proves they lower + fit)."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.ft import FTConfig, TrainRunner
+from repro.train.optim import OptConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="train the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if cfg.family != "lm" and not args.smoke:
+        raise SystemExit("full-size non-LM training needs accelerators; use --smoke")
+
+    runner = TrainRunner(
+        cfg,
+        OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                  total_steps=args.steps),
+        DataConfig(seq_len=args.seq_len, global_batch=args.global_batch,
+                   seed=args.seed),
+        FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
+        seed=args.seed,
+    )
+    runner.run(args.steps)
+    first = runner.metrics_log[0]["loss"] if runner.metrics_log else float("nan")
+    last = runner.metrics_log[-1]["loss"] if runner.metrics_log else float("nan")
+    print(json.dumps({
+        "arch": cfg.name, "steps": len(runner.metrics_log),
+        "first_loss": first, "last_loss": last,
+        "stragglers": len(runner.monitor.flagged),
+    }))
+
+
+if __name__ == "__main__":
+    main()

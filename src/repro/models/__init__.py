@@ -1,0 +1,10 @@
+"""Pure-JAX model zoo: one layer-pattern abstraction covers dense GQA
+transformers, MoE, Mamba2 SSD, and hybrid (Jamba) stacks; encoder-decoder
+(Whisper) and VLM (LLaVA) wrap the same building blocks."""
+
+from .common import ArchConfig, LayerSpec, MoESpec, SSMSpec  # noqa: F401
+from .lm import (decode_step, init_lm, init_decode_cache, lm_loss,  # noqa: F401
+                 lm_forward, prefill)
+from .encdec import (encdec_forward, encdec_loss, init_encdec,  # noqa: F401
+                     encdec_prefill, encdec_decode_step, init_encdec_cache)
+from .vlm import init_vlm, vlm_loss, vlm_prefill  # noqa: F401

@@ -1,0 +1,259 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (three
+implementations: einsum ref, chunked online-softmax scan, Pallas flash),
+SwiGLU MLP, embeddings. All functional; params are plain dict pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, DTYPES
+from .sharding import shard
+
+__all__ = ["rms_norm", "rope", "attention", "decode_attention", "swiglu",
+           "init_attn", "init_mlp", "init_norm", "attn_block", "mlp_block"]
+
+
+def init_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x: jax.Array, p: dict, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"].astype(x.dtype)
+
+
+def _head_rms(x: jax.Array, eps: float) -> jax.Array:
+    """qk_norm: RMS over the head dim (qwen3), no learned scale per-head
+    position split (scale folded into the projection at init)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, d); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)                # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ArchConfig, key: jax.Array) -> dict:
+    dt = DTYPES[cfg.param_dtype]
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "norm": init_norm(d, dt),
+        "wq": (jax.random.normal(k1, (d, hq * dh)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, hkv * dh)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, hkv * dh)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (hq * dh, d)) * (hq * dh) ** -0.5).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dt)
+        p["bk"] = jnp.zeros((hkv * dh,), dt)
+        p["bv"] = jnp.zeros((hkv * dh,), dt)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array,
+         rope_on: bool = True):
+    B, S, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"] + (p.get("bq", 0))
+    k = x @ p["wk"] + (p.get("bk", 0))
+    v = x @ p["wv"] + (p.get("bv", 0))
+    q = q.reshape(B, S, hq, dh)
+    k = k.reshape(B, S, hkv, dh)
+    v = v.reshape(B, S, hkv, dh)
+    if cfg.qk_norm:
+        q = _head_rms(q, cfg.norm_eps)
+        k = _head_rms(k, cfg.norm_eps)
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("dp", None, "model", None))
+    k = shard(k, ("dp", None, "model", None))
+    v = shard(v, ("dp", None, "model", None))
+    return q, k, v
+
+
+def _attn_ref(q, k, v, causal: bool, scale: float):
+    """(B, S, H, d) layout einsum attention (small/smoke path)."""
+    group = q.shape[2] // k.shape[2]
+    kf = jnp.repeat(k, group, axis=2)
+    vf = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)
+
+
+def _attn_chunked(q, k, v, causal: bool, scale: float, chunk: int,
+                  unroll: bool = False):
+    """Flash-style online softmax as a pure-jnp lax.scan over key blocks:
+    the memory profile of the Pallas kernel, expressible to GSPMD (used for
+    long sequences in the dry-run lowering)."""
+    B, Sq, Hq, d = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    C = min(chunk, Sk)
+    pad = (-Sk) % C
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = k.shape[1] // C
+    kb = jnp.moveaxis(k.reshape(B, nk, C, Hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, C, Hkv, d), 1, 0)
+    qf = q.astype(jnp.float32)
+    offs = Sk - Sq  # queries aligned to the end of keys
+
+    def step(carry, inp):
+        acc, mx, den = carry
+        ik, kc, vc = inp
+        kc = jnp.repeat(kc, group, axis=2).astype(jnp.float32)
+        vc = jnp.repeat(vc, group, axis=2).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kc) * scale
+        kpos = ik * C + jax.lax.broadcasted_iota(jnp.int32, (Sq, C), 1)
+        valid = kpos < Sk
+        if causal:
+            qpos = jax.lax.broadcasted_iota(jnp.int32, (Sq, C), 0) + offs
+            valid = valid & (qpos >= kpos)
+        s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(mx, s.max(-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mx - m_new)
+        den = den * corr + pexp.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", pexp, vc)
+        return (acc, m_new, den), None
+
+    acc0 = jnp.zeros((B, Hq, Sq, d), jnp.float32)
+    m0 = jnp.full((B, Hq, Sq), -1e30, jnp.float32)
+    d0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    (acc, _, den), _ = jax.lax.scan(
+        step, (acc0, m0, d0), (jnp.arange(nk), kb, vb),
+        unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, Hq, d)
+
+
+def attention(cfg: ArchConfig, q, k, v, causal: bool = True) -> jax.Array:
+    """(B, S, H, d) in/out; implementation selected by cfg.attn_impl."""
+    scale = cfg.d_head ** -0.5
+    impl = cfg.attn_impl
+    if impl == "auto":
+        if jax.default_backend() == "tpu":
+            impl = "pallas"
+        else:
+            impl = "chunked" if q.shape[1] * k.shape[1] > 1 << 22 else "ref"
+    if impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                              jnp.moveaxis(v, 2, 1), causal=causal, scale=scale)
+        return jnp.moveaxis(out, 1, 2)
+    if impl == "chunked":
+        return _attn_chunked(q, k, v, causal, scale, cfg.attn_chunk,
+                             unroll=cfg.scan_unroll)
+    return _attn_ref(q, k, v, causal, scale)
+
+
+def decode_attention(q, k_cache, v_cache, length: jax.Array, scale: float,
+                     layout: str = "heads"):
+    """Single-token attention against a (B, S_max, Hkv, d) cache holding
+    `length` valid entries. q: (B, 1, Hq, d).
+
+    layout="dh": align the q/k contraction to a HEAD-DIM-sharded cache
+    (TP-divisible for any kv-head count): the big cache stays put and the
+    contraction emits small partial-score all-reduces — the §Perf fix for
+    collective-bound decode."""
+    B, Smax, Hkv, d = k_cache.shape
+    group = q.shape[2] // Hkv
+    # keep the big cache in its storage dtype; the dots accumulate in f32
+    # (preferred_element_type) without materializing an f32 cache copy
+    qf = q.reshape(B, Hkv, group, d)
+    kf = k_cache
+    if layout == "dh":
+        qf = shard(qf, ("dp", None, None, "model"))
+        kf = shard(kf, ("dp", None, None, "model"))
+    elif layout == "seq":
+        # flash-decode: cache sharded along the sequence; scores and the
+        # softmax stats stay shard-local, only (B, Hkv, g, d)-sized partial
+        # outputs cross the fabric
+        kf = shard(kf, ("dp", "model", None, None))
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kf,
+                   preferred_element_type=jnp.float32) * scale
+    if layout == "dh":
+        s = shard(s, ("dp", None, None, None))
+    elif layout == "seq":
+        s = shard(s, ("dp", None, None, "model"))
+    valid = jnp.arange(Smax)[None, None, None, :] < length
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    vf = v_cache
+    if layout == "dh":
+        vf = shard(vf, ("dp", None, None, "model"))
+    elif layout == "seq":
+        vf = shard(vf, ("dp", "model", None, None))
+        p = shard(p, ("dp", None, None, "model"))
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    if layout == "dh":
+        out = shard(out, ("dp", None, None, "model"))
+    elif layout == "seq":
+        out = shard(out, ("dp", None, None, None))
+    return out.reshape(B, 1, q.shape[2], d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchConfig, key: jax.Array) -> dict:
+    dt = DTYPES[cfg.param_dtype]
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm": init_norm(d, dt),
+        "w_gate": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, ("dp", None, "model"))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# blocks (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def attn_block(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array,
+               causal: bool = True) -> jax.Array:
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h, positions)
+    o = attention(cfg, q, k, v, causal=causal)
+    B, S, _, _ = o.shape
+    return x + o.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def mlp_block(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    return x + swiglu(p, rms_norm(x, p["norm"], cfg.norm_eps))

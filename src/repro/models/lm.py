@@ -1,0 +1,289 @@
+"""Decoder-only LM over the layer-pattern abstraction.
+
+The stack is jax.lax.scan over `n_periods` copies of the period (stacked
+params), so a 94-layer MoE model lowers to one period body — this keeps the
+512-device dry-run compile tractable and is also how production frameworks
+keep HLO size bounded.
+
+Three entry points per architecture:
+  lm_forward / lm_loss      — training (chunked vocab-sharded cross-entropy)
+  prefill                   — build KV/SSM caches for a prompt
+  decode_step               — one token against the cache (serve_step)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, DTYPES
+from .layers import (attn_block, decode_attention, init_attn, init_mlp,
+                     init_norm, mlp_block, rms_norm, rope, _qkv)
+from .moe import init_moe, moe_block
+from .sharding import shard
+from .ssm import (init_mamba, init_mamba_state, mamba_block,
+                  mamba_decode_step)
+
+__all__ = ["init_lm", "lm_forward", "lm_loss", "prefill", "decode_step",
+           "init_decode_cache"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_period(cfg: ArchConfig, key: jax.Array) -> dict:
+    p: dict[str, Any] = {}
+    keys = jax.random.split(key, 2 * len(cfg.period))
+    for i, spec in enumerate(cfg.period):
+        lp: dict[str, Any] = {}
+        if spec.kind == "attn":
+            lp["attn"] = init_attn(cfg, keys[2 * i])
+        elif spec.kind == "mamba":
+            lp["mamba"] = init_mamba(cfg, keys[2 * i])
+        else:
+            raise ValueError(spec.kind)
+        if spec.mlp == "dense":
+            lp["mlp"] = init_mlp(cfg, keys[2 * i + 1])
+        elif spec.mlp == "moe":
+            lp["moe"] = init_moe(cfg, keys[2 * i + 1])
+        p[f"l{i}"] = lp
+    return p
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array) -> dict:
+    dt = DTYPES[cfg.param_dtype]
+    k_embed, k_stack, k_out = jax.random.split(key, 3)
+    period_keys = jax.random.split(k_stack, cfg.n_periods)
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dt),
+        "stack": jax.vmap(lambda k: _init_period(cfg, k))(period_keys),
+        "final_norm": init_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(k_out, (cfg.d_model, cfg.padded_vocab))
+            * cfg.d_model ** -0.5).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def _apply_period(cfg: ArchConfig, pp: dict, x: jax.Array,
+                  positions: jax.Array, causal: bool = True):
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.period):
+        lp = pp[f"l{i}"]
+        if spec.kind == "attn":
+            x = attn_block(cfg, lp["attn"], x, positions, causal=causal)
+        else:
+            x = mamba_block(cfg, lp["mamba"], x)
+        if spec.mlp == "dense":
+            x = mlp_block(cfg, lp["mlp"], x)
+        elif spec.mlp == "moe":
+            x, a = moe_block(cfg, lp["moe"], x)
+            aux = aux + a
+        # Megatron-SP: keep the residual stream sequence-sharded on the TP
+        # axis between blocks — norms/elementwise run sharded, and the TP
+        # boundary collectives become all-gather/reduce-scatter pairs over
+        # 1/TP of the activation bytes
+        x = shard(x, ("dp", "model" if cfg.seq_parallel else None, None))
+    return x, aux
+
+
+def _maybe_remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def hidden_states(cfg: ArchConfig, params: dict, x: jax.Array,
+                  positions: jax.Array, causal: bool = True):
+    """Run the stack on embedded inputs x: (B, S, d) -> (h, aux)."""
+
+    def body(carry, pp):
+        h, aux = carry
+        h, a = _apply_period(cfg, pp, h, positions, causal=causal)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(
+        _maybe_remat(cfg, body),
+        (x, jnp.zeros((), jnp.float32)), params["stack"],
+        unroll=cfg.n_periods if cfg.scan_unroll else 1)
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+def embed_tokens(cfg: ArchConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens]
+    return shard(x, ("dp", None, None))
+
+
+def unembed_matrix(cfg: ArchConfig, params: dict) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def lm_forward(cfg: ArchConfig, params: dict, tokens: jax.Array,
+               positions: jax.Array | None = None):
+    """tokens: (B, S) -> (logits (B, S, V), aux)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, aux = hidden_states(cfg, params, embed_tokens(cfg, params, tokens), positions)
+    logits = h @ unembed_matrix(cfg, params)
+    return shard(logits, ("dp", None, "model")), aux
+
+
+def lm_loss(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            labels: jax.Array, aux_weight: float = 0.01,
+            loss_chunk: int | None = None, inputs_embeds: jax.Array | None = None):
+    """Chunked vocab-sharded cross-entropy: logits are materialized one
+    sequence chunk at a time, sharded on the vocab ("model") axis, so the
+    (B, S, 152k) tensor never exists."""
+    B, S = labels.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(cfg, params, tokens)
+    h, aux = hidden_states(cfg, params, x, positions)
+    w = unembed_matrix(cfg, params)
+
+    if loss_chunk is None:
+        loss_chunk = cfg.loss_chunk
+    C = min(loss_chunk, S) if loss_chunk > 0 else S
+    pad = (-S) % C
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nC = h.shape[1] // C
+    hc = jnp.moveaxis(h.reshape(B, nC, C, cfg.d_model), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nC, C), 1, 0)
+
+    vocab_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+
+    def chunk_loss(carry, inp):
+        hb, lb = inp
+        logits = shard(hb @ w, ("dp", None, "model")).astype(jnp.float32)
+        logits = jnp.where(vocab_mask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        valid = lb >= 0
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hc, lc))
+    return total / jnp.maximum(count, 1) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _attn_prefill(cfg: ArchConfig, lp: dict, x, positions):
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, h, positions)
+    from .layers import attention
+    o = attention(cfg, q, k, v, causal=True)
+    B, S, _, _ = o.shape
+    x = x + o.reshape(B, S, cfg.n_heads * cfg.d_head) @ lp["wo"]
+    return x, {"k": k, "v": v}
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            inputs_embeds: jax.Array | None = None):
+    """Returns (last-position logits (B, V), cache pytree). Cache leaves are
+    stacked per period (scan layout)."""
+    B, S = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(cfg, params, tokens)
+
+    def body(carry, pp):
+        h = carry
+        cache_p = {}
+        for i, spec in enumerate(cfg.period):
+            lp = pp[f"l{i}"]
+            if spec.kind == "attn":
+                h, kv = _attn_prefill(cfg, lp["attn"], h, positions)
+                cache_p[f"l{i}"] = kv
+            else:
+                h, st = mamba_block(cfg, lp["mamba"], h, return_state=True)
+                cache_p[f"l{i}"] = st
+            if spec.mlp == "dense":
+                h = mlp_block(cfg, lp["mlp"], h)
+            elif spec.mlp == "moe":
+                h, _ = moe_block(cfg, lp["moe"], h)
+        return h, cache_p
+
+    h, cache = jax.lax.scan(body, x, params["stack"],
+                            unroll=cfg.n_periods if cfg.scan_unroll else 1)
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (h @ unembed_matrix(cfg, params))[:, 0, :cfg.vocab]
+    return shard(logits, ("dp", None)), {"layers": cache, "length": jnp.full((), S, jnp.int32)}
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, capacity: int) -> dict:
+    """Empty cache at a given KV capacity (the decode_* dry-run cells)."""
+    dt = DTYPES[cfg.compute_dtype]
+    per = {}
+    for i, spec in enumerate(cfg.period):
+        if spec.kind == "attn":
+            kv = lambda: shard(
+                jnp.zeros((cfg.n_periods, batch, capacity, cfg.n_kv_heads, cfg.d_head), dt),
+                (None, "dp", "sp", "model", None))
+            per[f"l{i}"] = {"k": kv(), "v": kv()}
+        else:
+            st = init_mamba_state(cfg, batch, dt)
+            per[f"l{i}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), st)
+    return {"layers": per, "length": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jax.Array):
+    """token: (B, 1) -> (logits (B, V), new cache). One serve_step."""
+    B = token.shape[0]
+    length = cache["length"]
+    positions = jnp.broadcast_to(length[None, None], (B, 1))
+    x = embed_tokens(cfg, params, token)
+    scale = cfg.d_head ** -0.5
+
+    def body(h, inp):
+        pp, cache_p = inp
+        new_cache_p = {}
+        for i, spec in enumerate(cfg.period):
+            lp = pp[f"l{i}"]
+            if spec.kind == "attn":
+                ap = lp["attn"]
+                hn = rms_norm(h, ap["norm"], cfg.norm_eps)
+                q, k, v = _qkv(cfg, ap, hn, positions)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    cache_p[f"l{i}"]["k"], k.astype(cache_p[f"l{i}"]["k"].dtype),
+                    length, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    cache_p[f"l{i}"]["v"], v.astype(cache_p[f"l{i}"]["v"].dtype),
+                    length, axis=1)
+                o = decode_attention(q, kc, vc, length + 1, scale,
+                                     layout=cfg.decode_cache_layout)
+                h = h + o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ ap["wo"]
+                new_cache_p[f"l{i}"] = {"k": kc, "v": vc}
+            else:
+                st, h = mamba_decode_step(cfg, lp["mamba"], cache_p[f"l{i}"], h)
+                new_cache_p[f"l{i}"] = st
+            if spec.mlp == "dense":
+                h = mlp_block(cfg, lp["mlp"], h)
+            elif spec.mlp == "moe":
+                h, _ = moe_block(cfg, lp["moe"], h)
+        return h, new_cache_p
+
+    h, new_layers = jax.lax.scan(
+        body, x, (params["stack"], cache["layers"]),
+        unroll=cfg.n_periods if cfg.scan_unroll else 1)
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (h @ unembed_matrix(cfg, params))[:, 0, :cfg.vocab]
+    return shard(logits, ("dp", None)), {"layers": new_layers, "length": length + 1}

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer: top-k softmax router + sort-based capacity
+dispatch (Megablocks-style, expressed with gather/scatter so GSPMD turns the
+token movement into the expert all-to-all — the fan-in coflow pattern the
+planner schedules).
+
+Experts are sharded on the "model" mesh axis (EP); tokens stay sharded on
+"dp". Capacity C = ceil(T * top_k / E * capacity_factor); overflowing
+tokens are dropped (standard practice; smoke tests set the factor high
+enough that nothing drops and the layer is exactly checkable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, DTYPES
+from .layers import rms_norm
+from .sharding import shard
+
+__all__ = ["init_moe", "moe_block"]
+
+
+def init_moe(cfg: ArchConfig, key: jax.Array) -> dict:
+    dt = DTYPES[cfg.param_dtype]
+    spec = cfg.moe
+    d, f, e = cfg.d_model, spec.d_ff_expert, spec.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "norm": {"scale": jnp.ones((d,), dt)},
+        "router": (jax.random.normal(k1, (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (e, d, f)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(k3, (e, d, f)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(k4, (e, f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x: jax.Array,
+            local_tokens: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). local_tokens=True runs inside
+    shard_map's manual dp axes (token-dim constraints must be skipped;
+    the "model" expert constraint still applies — it is an auto axis)."""
+    spec = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = spec.n_experts, spec.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (T, k)
+    if spec.router_norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # capacity: a single expert can receive at most T tokens (each token
+    # routes to k *distinct* experts), so clamp there — this also makes
+    # small-T decode steps drop-free.
+    C = int(min(T, max(1, round(-(-T * k // E) * spec.capacity_factor))))
+
+    # sort token-expert pairs by expert, rank within expert = position in
+    # the sorted run; pairs beyond capacity drop.
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert = global position minus the expert's segment start
+    # (arange, NOT cumsum(ones): a constant cumsum constant-folds through an
+    # O(n*w) reduce-window in XLA and stalls 512-device compiles)
+    cum = jnp.arange(se.size, dtype=se.dtype)
+    seg_start = jnp.full((E,), T * k, cum.dtype).at[se].min(cum)
+    rank = cum - seg_start[se]
+    keep = rank < C
+    slot = se * C + rank                                     # (T*k,) in [0, E*C)
+
+    # scatter tokens into (E*C, d) buffers
+    xbuf = jnp.zeros((E * C, d), x.dtype)
+    xbuf = xbuf.at[jnp.where(keep, slot, E * C - 1)].add(
+        jnp.where(keep[:, None], xt[st_], 0).astype(x.dtype))
+    xbuf = xbuf.reshape(E, C, d)
+    xbuf = shard(xbuf, ("model", None, None))
+
+    h = jnp.einsum("ecd,edf->ecf", xbuf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xbuf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"])
+    y = y.reshape(E * C, d)
+
+    # combine back to tokens with gate weights
+    out = jnp.zeros((T, d), jnp.float32)
+    contrib = jnp.where(keep[:, None], y[jnp.where(keep, slot, 0)].astype(jnp.float32)
+                        * sg[:, None], 0.0)
+    out = out.at[st_].add(contrib)
+    out = out.astype(x.dtype).reshape(B, S, d)
+    if local_tokens:
+        return out, aux
+    return shard(out, ("dp", None, None)), aux
+
+
+def moe_ffn_shard_map(cfg: ArchConfig, p: dict, x: jax.Array):
+    """Per-dp-shard routing under jax.shard_map (manual over the dp axes,
+    auto over "model"): the token gather/scatter of the dispatch is provably
+    LOCAL to each data shard — GSPMD cannot see that locality in the global
+    formulation and replicates the scatters (the §Perf 6.3 pathology). The
+    only cross-fabric movement left is the (E, C, d) buffer resharding onto
+    the expert ("model") axis: the honest MoE all-to-all volume."""
+    from .sharding import current_mesh, logical_spec
+    from jax.sharding import PartitionSpec as P
+
+    mesh = current_mesh()
+    if mesh is None:  # single-device paths (smoke tests, serving on CPU)
+        return moe_ffn(cfg, p, x)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def local(xl, router, wg, wu, wd):
+        lp = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        y, aux = moe_ffn(cfg, lp, xl, local_tokens=True)
+        # NOTE: no pmean here — a scalar all-reduce inside manual axes trips
+        # XLA:CPU's AllReducePromotion pass (crash observed at 256 devices);
+        # per-shard aux values are returned sharded and averaged outside.
+        return y, aux[None]
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None, None), P(), P(), P(), P()),
+        out_specs=(P(dp, None, None), P(dp)),
+        axis_names=set(dp), check_vma=False)
+    y, aux_shards = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, jnp.mean(aux_shards)
+
+
+def moe_block(cfg: ArchConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if cfg.moe.impl == "shard_map":
+        y, aux = moe_ffn_shard_map(cfg, p, h)
+    else:
+        y, aux = moe_ffn(cfg, p, h)
+    return x + y, aux

@@ -1,0 +1,88 @@
+"""Logical sharding annotations for model code.
+
+Models call `shard(x, ("dp", None, "model"))` with *logical* axis names;
+outside a mesh context this is a no-op, inside one it becomes
+with_sharding_constraint under the active rules. The rules map logical
+names to mesh axes:
+
+    dp    -> ("pod", "data") or ("data",)   batch / data parallel
+    model -> ("model",)                      tensor / expert parallel
+    sp    -> ("data",)                       sequence parallel (long decode)
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+DEFAULT_RULES = {
+    "dp": ("data",),
+    "model": ("model",),
+    "sp": ("data",),
+}
+
+
+@contextmanager
+def mesh_context(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    rules = dict(rules or {})
+    for k, v in DEFAULT_RULES.items():
+        rules.setdefault(k, v)
+    # drop rules referencing axes the mesh does not have
+    rules = {k: tuple(a for a in v if a in mesh.axis_names)
+             for k, v in rules.items()}
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> Mesh | None:
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def logical_spec(axes: tuple) -> P | None:
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return None
+    _, rules = st
+    spec = []
+    for a in axes:
+        if a is None:
+            spec.append(None)
+        else:
+            mapped = rules.get(a, ())
+            spec.append(mapped if len(mapped) > 1 else (mapped[0] if mapped else None))
+    return P(*spec)
+
+
+def shard(x: jax.Array, axes: tuple) -> jax.Array:
+    """Annotate x with a logical sharding; no-op outside mesh_context.
+    Axes that do not divide the corresponding dimension are dropped (GSPMD
+    would otherwise pad or involuntarily rematerialize — e.g. 4 kv heads
+    cannot split over a 16-way model axis)."""
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return x
+    mesh, rules = st
+    fixed = []
+    for i, a in enumerate(axes):
+        if a is None:
+            fixed.append(None)
+            continue
+        mapped = rules.get(a, ())
+        size = 1
+        for ax in mapped:
+            size *= mesh.shape[ax]
+        if size <= 1 or i >= x.ndim or x.shape[i] % size != 0:
+            fixed.append(None)
+        else:
+            fixed.append(mapped if len(mapped) > 1 else mapped[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD) block: in_proj -> [z | x | B | C | dt], short depthwise
+conv over (x, B, C), SSD scan (Pallas kernel on TPU, chunked/sequential jnp
+elsewhere), gated RMSNorm, out_proj. Decode keeps O(1) state per layer:
+(h: (B, H, N, P), conv window: (B, d_conv-1, conv_channels)) — this is what
+makes the long_500k cell tractable for SSM/hybrid architectures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, DTYPES
+from .layers import rms_norm
+from .sharding import shard
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode_step", "init_mamba_state"]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.d_head
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, H, conv_ch
+
+
+def init_mamba(cfg: ArchConfig, key: jax.Array) -> dict:
+    dt = DTYPES[cfg.param_dtype]
+    s, d_inner, H, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    return {
+        "pre_norm": {"scale": jnp.ones((d,), dt)},
+        "in_proj": (jax.random.normal(k1, (d, in_dim)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_ch)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((H,), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dt)},
+        "out_proj": (jax.random.normal(k3, (d_inner, d)) * d_inner ** -0.5).astype(dt),
+    }
+
+
+def _split(cfg: ArchConfig, proj: jax.Array):
+    s, d_inner, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _conv(cfg: ArchConfig, p: dict, xbc: jax.Array) -> jax.Array:
+    """Causal depthwise conv along S: xbc (B, S, C)."""
+    s = cfg.ssm
+    w = p["conv_w"]                                  # (K, C)
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _ssd_inputs(cfg: ArchConfig, p: dict, xbc: jax.Array, dt_raw: jax.Array):
+    s, d_inner, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    B_, S = xbc.shape[0], xbc.shape[1]
+    x, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    x = x.reshape(B_, S, H, s.d_head)
+    b = b.reshape(B_, S, s.n_groups, s.d_state)
+    c = c.reshape(B_, S, s.n_groups, s.d_state)
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["a_log"]) * dt_v)                            # decay (0,1]
+    x_in = x * dt_v[..., None].astype(x.dtype)
+    return x, x_in, a, b, c
+
+
+def mamba_block(cfg: ArchConfig, p: dict, x: jax.Array,
+                return_state: bool = False):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    proj = h @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split(cfg, proj)
+    xbc = _conv(cfg, p, xbc_raw)
+    xs, x_in, a, b, c = _ssd_inputs(cfg, p, xbc, dt_raw)
+    xs = shard(xs, ("dp", None, "model", None))
+    use_kernel = (cfg.attn_impl == "pallas"
+                  or (cfg.attn_impl == "auto" and jax.default_backend() == "tpu"))
+    if use_kernel and not return_state:
+        from repro.kernels.ssd_scan import ssd_scan
+        y = ssd_scan(x_in, a, b, c, chunk=s.chunk)
+        hfinal = None
+    else:
+        y, hfinal = _ssd_chunked_jnp(x_in, a, b, c, s.chunk)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(x.shape[0], x.shape[1], d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + y @ p["out_proj"]
+    if not return_state:
+        return out
+    # decode handoff state: final SSD state + last (d_conv - 1) raw conv inputs
+    K = s.d_conv
+    S = x.shape[1]
+    if S >= K - 1:
+        conv_state = xbc_raw[:, S - (K - 1):, :]
+    else:
+        conv_state = jnp.pad(xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"h": hfinal, "conv": conv_state}
+
+
+def _ssd_chunked_jnp(x, a, b, c, chunk: int):
+    """Chunked SSD in pure jnp — loop-free formulation: all intra-chunk
+    terms are batched over chunks, and the inter-chunk state recurrence is a
+    log-depth jax.lax.associative_scan. No `while` in the lowering (exact
+    XLA cost accounting for the roofline) and better TPU parallelism than a
+    sequential chunk scan; identical math to the Pallas kernel."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nC = Sp // L
+    xf = x.reshape(B, nC, L, H, P).astype(jnp.float32)
+    la = jnp.log(jnp.maximum(a, 1e-37)).reshape(B, nC, L, H).astype(jnp.float32)
+    bf = jnp.repeat(b, rep, axis=2).reshape(B, nC, L, H, N).astype(jnp.float32)
+    cf = jnp.repeat(c, rep, axis=2).reshape(B, nC, L, H, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=2)                       # (B,nC,L,H)
+    tot = cum[:, :, -1, :]                             # (B,nC,H) per-chunk log decay
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    # intra-chunk (batched over chunks)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bclhn,bckhn->bclkh", cf, bf) * mask
+    y = jnp.einsum("bclkh,bckhp->bclhp", scores, xf)
+
+    # per-chunk state contribution S_c = sum_i exp(tot - cum_i) b_i x_i^T
+    wb = bf * jnp.exp(tot[:, :, None, :] - cum)[..., None]
+    Sc = jnp.einsum("bclhn,bclhp->bchnp", wb, xf)      # (B,nC,H,N,P)
+
+    # inter-chunk recurrence h_{c} = A_c h_{c-1} + S_c via associative scan
+    # combine: (A1,S1) o (A2,S2) = (A1*A2, S1*A2 + S2); then shift right
+    def combine(lhs, rhs):
+        A1, S1 = lhs
+        A2, S2 = rhs
+        return A1 * A2, S1 * A2[..., None, None] + S2
+
+    A = jnp.exp(tot)                                   # (B,nC,H)
+    Ah, Sh = jax.lax.associative_scan(combine, (A, Sc), axis=1)
+    # state ENTERING chunk c = h_{c-1}: shift; h before chunk 0 is 0
+    h_in = jnp.concatenate(
+        [jnp.zeros_like(Sh[:, :1]), Sh[:, :-1]], axis=1)
+    y += jnp.exp(cum)[..., None] * jnp.einsum("bclhn,bchnp->bclhp", cf, h_in)
+    hf = Sh[:, -1]                                     # final state (B,H,N,P)
+    y = y.reshape(B, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), hf
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s, d_inner, H, conv_ch = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, s.d_state, s.d_head), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode_step(cfg: ArchConfig, p: dict, state: dict, x: jax.Array):
+    """x: (B, 1, d) -> (new_state, y (B, 1, d))."""
+    s, d_inner, H, conv_ch = _dims(cfg)
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    proj = h @ p["in_proj"]
+    z, xbc, dt_raw = _split(cfg, proj)
+    window = jnp.concatenate([state["conv"], xbc], axis=1)     # (B, K, C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])[:, None, :]
+    new_conv = window[:, 1:, :]
+    xs, x_in, a, b, c = _ssd_inputs(cfg, p, conv_out, dt_raw)
+    rep = H // s.n_groups
+    from repro.kernels.ssd_scan.ref import ssd_decode_step
+    hs, y = ssd_decode_step(state["h"], x_in[:, 0], a[:, 0], b[:, 0], c[:, 0])
+    y = y[:, None] + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return {"h": hs, "conv": new_conv}, x + y @ p["out_proj"]

@@ -1,0 +1,44 @@
+"""VLM (LLaVA-NeXT) backbone: the assignment specifies the transformer
+backbone only — the vision tower + anyres tiling is a STUB. `input_specs()`
+supplies precomputed patch embeddings (B, n_image_tokens, d_model), already
+projected into the LM embedding space; they occupy the first positions of
+the sequence, text tokens fill the rest. Loss masks image positions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig
+from .lm import embed_tokens, init_lm, lm_loss, prefill
+from .sharding import shard
+
+__all__ = ["init_vlm", "vlm_loss", "vlm_prefill"]
+
+
+def init_vlm(cfg: ArchConfig, key: jax.Array) -> dict:
+    return init_lm(cfg, key)
+
+
+def _embeds(cfg: ArchConfig, params: dict, patches: jax.Array,
+            tokens: jax.Array) -> jax.Array:
+    text = embed_tokens(cfg, params, tokens)
+    x = jnp.concatenate([patches.astype(text.dtype), text], axis=1)
+    return shard(x, ("dp", None, None))
+
+
+def vlm_loss(cfg: ArchConfig, params: dict, patches: jax.Array,
+             tokens: jax.Array, labels: jax.Array) -> jax.Array:
+    """patches: (B, n_img, d); tokens: (B, S_text); labels: (B, S_text).
+    Total sequence length = n_img + S_text."""
+    B, n_img = patches.shape[:2]
+    x = _embeds(cfg, params, patches, tokens)
+    full_labels = jnp.concatenate(
+        [jnp.full((B, n_img), -1, labels.dtype), labels], axis=1)
+    return lm_loss(cfg, params, None, full_labels, inputs_embeds=x)
+
+
+def vlm_prefill(cfg: ArchConfig, params: dict, patches: jax.Array,
+                tokens: jax.Array):
+    x = _embeds(cfg, params, patches, tokens)
+    dummy = jnp.zeros((x.shape[0], x.shape[1]), jnp.int32)
+    return prefill(cfg, params, dummy, inputs_embeds=x)

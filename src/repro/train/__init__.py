@@ -1,0 +1,5 @@
+"""Training substrate: AdamW + schedules, microbatched train step with
+planner-ordered gradient buckets, mixed precision."""
+
+from .optim import OptConfig, adamw_init, adamw_update  # noqa: F401
+from .step import TrainState, build_train_step, init_train_state  # noqa: F401

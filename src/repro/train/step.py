@@ -1,0 +1,148 @@
+"""Train step builder: family-dispatched loss, microbatch gradient
+accumulation, planner-ordered gradient buckets (the paper's coflow schedule
+realized as HLO dependency chains), AdamW update.
+
+The bucket ordering hook: gradients are grouped into buckets (per period-
+stack leaf by default); `bucket_order` (from repro.dist.planner, i.e. the
+G-DM permutation over the step's collectives) chains bucket i+1 behind
+bucket i's reduced value with jax.lax.optimization_barrier — in SPMD this
+pins the launch order of the gradient all-reduces / reduce-scatters, which
+is exactly the control the paper's schedule exercises over the fabric.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (ArchConfig, encdec_loss, init_encdec, init_lm,
+                          init_vlm, lm_loss, vlm_loss)
+from repro.models.sharding import shard
+
+from .optim import OptConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "init_train_state", "build_train_step", "loss_for"]
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten,
+    lambda aux, children: TrainState(*children))
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    if cfg.family == "encdec":
+        return init_encdec(cfg, key)
+    if cfg.family == "vlm":
+        return init_vlm(cfg, key)
+    return init_lm(cfg, key)
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def loss_for(cfg: ArchConfig) -> Callable:
+    """Batch-dict -> scalar loss, per family. Batch layouts (see
+    launch/specs.py): lm {tokens, labels}; vlm {patches, tokens, labels};
+    encdec {frames, tokens, labels}."""
+    if cfg.family == "encdec":
+        return lambda p, b: encdec_loss(cfg, p, b["frames"], b["tokens"], b["labels"])
+    if cfg.family == "vlm":
+        return lambda p, b: vlm_loss(cfg, p, b["patches"], b["tokens"], b["labels"])
+    return lambda p, b: lm_loss(cfg, p, b["tokens"], b["labels"])
+
+
+def _apply_bucket_order(grads: Any, order: list[list[str]] | None) -> Any:
+    """Chain gradient buckets in the planner's order via optimization
+    barriers. `order`: list of buckets, each a list of '/'-joined leaf
+    paths; unlisted leaves keep natural order (no constraint)."""
+    if not order:
+        return grads
+    from repro.dist.partition import _path_str
+
+    flat = {}
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(grads)[0]
+    for path, leaf in leaves_with_path:
+        flat[_path_str(path)] = leaf
+    token = None
+    for bucket in order:
+        vals = [flat[p] for p in bucket if p in flat]
+        if not vals:
+            continue
+        if token is not None:
+            # bucket depends on the previous bucket's reduced values
+            chained = jax.lax.optimization_barrier(tuple(vals) + (token,))
+            vals2 = chained[:-1]
+        else:
+            vals2 = jax.lax.optimization_barrier(tuple(vals))
+        for p, v in zip([p for p in bucket if p in flat], vals2):
+            flat[p] = v
+        token = jnp.zeros((), jnp.float32) + sum(
+            jnp.sum(v[(0,) * v.ndim]).astype(jnp.float32) * 0 for v in vals2)
+    # rebuild tree
+    paths = [_path_str(p) for p, _ in leaves_with_path]
+    treedef = jax.tree_util.tree_structure(grads)
+    return jax.tree_util.tree_unflatten(treedef, [flat[p] for p in paths])
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptConfig,
+    micro_steps: int = 1,
+    bucket_order: list[list[str]] | None = None,
+    grad_compression: bool = False,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics). batch leaves
+    have leading dim global_batch; microbatching splits it into micro_steps
+    accumulation chunks via lax.scan (compute/comm overlap window)."""
+    loss_fn = loss_for(cfg)
+
+    def compute_grads(params, batch):
+        if micro_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        def split(x):
+            B = x.shape[0]
+            assert B % micro_steps == 0
+            return x.reshape(micro_steps, B // micro_steps, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(acc_step, (jnp.zeros(()), g0), micro)
+        inv = 1.0 / micro_steps
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = compute_grads(state.params, batch)
+        if grad_compression:
+            from repro.dist.compression import compress_decompress
+            grads = compress_decompress(grads)
+        grads = _apply_bucket_order(grads, bucket_order)
+        params, opt, stats = adamw_update(state.params, grads, state.opt, opt_cfg)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        metrics = {"loss": loss, **stats, "step": state.step + 1}
+        return new_state, metrics
+
+    return train_step

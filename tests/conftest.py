@@ -1,0 +1,7 @@
+import os
+import sys
+from pathlib import Path
+
+# tests see the default single CPU device (the 512-device override is only
+# ever set inside repro.launch.dryrun / dedicated subprocess tests)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))

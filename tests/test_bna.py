@@ -1,0 +1,72 @@
+"""BNA (Algorithm 1) unit + property tests: optimality (length == effective
+size), matching validity, demand conservation — on adversarial and random
+demand matrices."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bna, effective_size
+from repro.core.bna import schedule_total_time, verify_bna_schedule
+
+
+def test_empty():
+    assert bna(np.zeros((4, 4), dtype=np.int64)) == []
+
+
+def test_single_flow():
+    d = np.zeros((3, 3), dtype=np.int64)
+    d[0, 2] = 7
+    pieces = bna(d, validate=True)
+    assert schedule_total_time(pieces) == 7
+
+
+def test_permutation_matrix():
+    d = np.eye(5, dtype=np.int64) * 13
+    pieces = bna(d, validate=True)
+    assert schedule_total_time(pieces) == 13
+    assert len(pieces) == 1  # one matching suffices
+
+
+def test_dense_uniform():
+    m = 6
+    d = np.full((m, m), 3, dtype=np.int64)
+    pieces = bna(d, validate=True)
+    assert schedule_total_time(pieces) == effective_size(d) == 3 * m
+
+
+def test_skewed_row():
+    d = np.zeros((4, 4), dtype=np.int64)
+    d[0] = [10, 20, 30, 40]   # one hot sender
+    d[2, 0] = 5
+    pieces = bna(d, validate=True)
+    assert schedule_total_time(pieces) == 100
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    m=st.integers(2, 9),
+    seed=st.integers(0, 10_000),
+    density=st.floats(0.1, 1.0),
+    hi=st.integers(1, 50),
+)
+def test_property_random(m, seed, density, hi):
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, hi + 1, size=(m, m))
+    d[rng.random((m, m)) > density] = 0
+    pieces = bna(d.astype(np.int64))
+    verify_bna_schedule(d.astype(np.int64), pieces)  # matching+conservation
+    assert schedule_total_time(pieces) == effective_size(d)  # optimality
+
+
+def test_diagonal_conflict():
+    # all senders target the same receiver: serialization forced
+    m = 5
+    d = np.zeros((m, m), dtype=np.int64)
+    d[:, 0] = 4
+    pieces = bna(d, validate=True)
+    assert schedule_total_time(pieces) == 4 * m
+
+
+def test_rejects_negative():
+    with pytest.raises(ValueError):
+        bna(np.array([[-1, 0], [0, 0]]))

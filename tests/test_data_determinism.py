@@ -1,0 +1,76 @@
+"""Data pipeline and scheduling-determinism invariants that the fault
+tolerance story depends on."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import Coflow, Instance, Job, dma, gdm, om_alg
+from repro.core.dma import draw_delays
+from repro.data.pipeline import DataConfig, SyntheticTokens
+
+CFG = get_config("tinyllama-1.1b").smoke()
+
+
+def test_batches_are_pure_functions_of_step():
+    a = SyntheticTokens(CFG, DataConfig(seq_len=64, global_batch=8, seed=3))
+    b = SyntheticTokens(CFG, DataConfig(seq_len=64, global_batch=8, seed=3))
+    for step in (0, 7, 123):
+        ba, bb = a.batch_at(step), b.batch_at(step)
+        for k in ba:
+            assert np.array_equal(np.asarray(ba[k]), np.asarray(bb[k]))
+
+
+def test_host_sharded_rows_match_global_batch():
+    data = SyntheticTokens(CFG, DataConfig(seq_len=32, global_batch=8, seed=0))
+    full = data.batch_at(5)
+    lo = data.batch_at(5, lo=0, hi=4)
+    hi = data.batch_at(5, lo=4, hi=8)
+    got = np.concatenate([np.asarray(lo["tokens"]), np.asarray(hi["tokens"])])
+    assert np.array_equal(got, np.asarray(full["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    data = SyntheticTokens(CFG, DataConfig(seq_len=16, global_batch=2, seed=1))
+    b = data.batch_at(0)
+    toks, labels = np.asarray(b["tokens"]), np.asarray(b["labels"])
+    assert np.array_equal(labels[:, :-1], toks[:, 1:])
+    assert (labels[:, -1] == -1).all()
+
+
+def test_data_has_learnable_structure():
+    data = SyntheticTokens(CFG, DataConfig(seq_len=512, global_batch=4, seed=0))
+    toks = np.asarray(data.batch_at(0)["tokens"])
+    v = CFG.vocab
+    pred = (toks[:, :-1] * 31 + 7) % (v - 1) + 1
+    frac = (pred == toks[:, 1:]).mean()
+    assert frac > 0.3  # ~half the transitions follow the affine rule
+
+
+def test_spread_delays_deterministic():
+    # rng=None selects the deterministic de-randomized mode (§IV-C stand-in)
+    d1 = draw_delays([1, 2, 3, 4], delta=100, beta=2.0, rng=None)
+    d2 = draw_delays([1, 2, 3, 4], delta=100, beta=2.0, rng=None)
+    assert d1 == d2
+    assert min(d1.values()) == 0 and max(d1.values()) == 100 // 2
+
+
+def test_gdm_deterministic_given_rng_seed():
+    from repro.core import paper_workload
+    inst = paper_workload(m=10, mu_bar=3, seed=4, scale=0.04)
+    a = gdm(inst, rng=np.random.default_rng(9)).twct()
+    b = gdm(inst, rng=np.random.default_rng(9)).twct()
+    assert a == b
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_om_alg_is_delay_free_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for j in range(3):
+        d = rng.integers(0, 9, size=(5, 5)).astype(np.int64)
+        jobs.append(Job(j, [Coflow(j, 0, d)], [], weight=1.0))
+    inst = Instance(5, jobs)
+    assert om_alg(inst).twct() == om_alg(inst).twct()

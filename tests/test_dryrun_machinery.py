@@ -1,0 +1,104 @@
+"""Dry-run machinery validated in-process on small meshes via subprocesses
+(the 512-device production sweep runs through repro.launch.dryrun itself):
+  * collective-bytes HLO parsing
+  * depth-1/2 unrolled cost extrapolation == truly-unrolled full-depth cost
+  * elastic checkpoint restore onto a different device count
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    prog = (f"import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(code))
+    out = subprocess.run([sys.executable, "-c", prog], env=ENV,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %all-reduce.5 = bf16[2048]{0} all-reduce(%a), replica_groups={{0,1}}
+  %ag-start = (f32[128]{0}, f32[1024]{0}) all-gather-start(%b)
+  %cp.1 = f32[64,4]{1,0} collective-permute(%c)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 2048 * 2
+    assert got["all-gather"] == 128 * 4 + 1024 * 4
+    assert got["collective-permute"] == 64 * 4 * 4
+    assert got["total"] == sum(v for k, v in got.items()
+                               if k not in ("total", "n_ops"))
+
+
+@pytest.mark.slow
+def test_cost_extrapolation_matches_unrolled():
+    out = run_py("""
+        import json, jax
+        from repro.configs import get_config
+        from repro.launch.dryrun import _compile_cell, _extract_cost, cost_probe
+        cfg = get_config('tinyllama-1.1b').smoke().replace(
+            n_periods=5, remat='none')
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        # ground truth: fully unrolled at full depth, loop-free settings
+        full = cfg.replace(attn_impl='ref', loss_chunk=0, scan_unroll=True)
+        # build a tiny train cell directly
+        from repro.launch.dryrun import build_cell
+        compiled = _compile_cell(full, 'train_4k', mesh,
+                                 {'config': {}})
+        truth = _extract_cost(compiled)
+        est, _ = cost_probe(cfg, 'train_4k', mesh, None)
+        print(json.dumps({'truth': truth['flops'], 'est': est['flops']}))
+    """, devices=8)
+    # the smoke train_4k shape is huge for a smoke config; patch: use a tiny
+    # custom shape via SHAPES? -> simpler: compare ratio
+    got = json.loads(out.strip().splitlines()[-1])
+    rel = abs(got["est"] - got["truth"]) / got["truth"]
+    # not bit-exact: XLA CSEs shared subcomputations (rope tables, iotas)
+    # differently across unroll depths; a few percent is well within what
+    # the roofline analysis needs
+    assert rel < 0.06, got
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_meshes(tmp_path):
+    out = run_py(f"""
+        import json, numpy as np, jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.train.step import init_train_state
+        from repro.ckpt import save, restore
+        from repro.dist.partition import param_pspecs, shardings
+        cfg = get_config('tinyllama-1.1b').smoke()
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        # save under a (2, 4) mesh placement
+        mesh_a = jax.make_mesh((2, 4), ('data', 'model'))
+        sh_a = shardings(param_pspecs(state.params), mesh_a)
+        params_a = jax.device_put(state.params, sh_a)
+        save(state, r'{tmp_path}', 3)
+        # restore onto a DIFFERENT mesh shape (4, 2) — elastic path
+        mesh_b = jax.make_mesh((4, 2), ('data', 'model'))
+        sh_b = shardings(param_pspecs(state.params), mesh_b)
+        like = jax.eval_shape(lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+        restored, manifest = restore(like, r'{tmp_path}')
+        ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                 for a, b in zip(jax.tree.leaves(restored),
+                                 jax.tree.leaves(state)))
+        pb = jax.device_put(restored.params, sh_b)   # re-shard onto mesh B
+        jax.block_until_ready(pb)
+        print(json.dumps({{'ok': bool(ok), 'step': manifest['step']}}))
+    """, devices=8)
+    got = json.loads(out.strip().splitlines()[-1])
+    assert got["ok"] and got["step"] == 3

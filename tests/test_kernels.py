@@ -1,0 +1,91 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret mode vs the
+pure-jnp ref oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.coflow_merge import interval_alphas
+from repro.kernels.coflow_merge.ref import alphas_ref, build_delta
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_decode_step, ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 2, 2, 16, 16, 32),    # MHA square
+    (2, 4, 2, 33, 33, 24),    # GQA, ragged seq
+    (1, 8, 2, 64, 128, 48),   # cross-length (prefill-with-prefix)
+    (1, 4, 1, 1, 96, 64),     # decode shape (q_len = 1)
+    (1, 4, 4, 48, 48, 128),   # MXU-aligned head dim
+])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 4e-2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(shape, dtype, tol, causal):
+    B, Hq, Hkv, Sq, Sk, d = shape
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Sk, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Sk, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, causal=causal)
+    err = float(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max())
+    assert err < tol, err
+
+
+@pytest.mark.parametrize("shape,chunk", [
+    ((1, 16, 2, 1, 8, 16), 8),
+    ((2, 33, 4, 2, 16, 32), 16),    # ragged + state groups
+    ((1, 64, 2, 2, 32, 64), 32),
+    ((1, 40, 8, 1, 16, 8), 64),     # chunk > seq
+])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4)])
+def test_ssd_scan_sweep(shape, chunk, dtype, tol):
+    B, S, H, G, N, P = shape
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), dtype)
+    a = jnp.asarray(RNG.uniform(0.55, 1.0, size=(B, S, H)), dtype)
+    b = jnp.asarray(RNG.normal(size=(B, S, G, N)), dtype) * 0.3
+    c = jnp.asarray(RNG.normal(size=(B, S, G, N)), dtype) * 0.3
+    out = ssd_scan(x, a, b, c, chunk=chunk)
+    ref = ssd_ref(x, a, b, c)
+    rel = float(jnp.abs(out - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < tol, rel
+
+
+def test_ssd_decode_step_matches_scan_tail():
+    B, S, H, G, N, P = 1, 12, 2, 1, 8, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    a = jnp.asarray(RNG.uniform(0.6, 1.0, size=(B, S, H)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    full = ssd_ref(x, a, b, c)
+    h = jnp.zeros((B, H, N, P), jnp.float32)
+    rep = H // G
+    for t in range(S):
+        h, y = ssd_decode_step(h, x[:, t], a[:, t], b[:, t], c[:, t])
+        assert float(jnp.abs(y - full[:, t]).max()) < 1e-4
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_coflow_merge_sweep(seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 40))
+    E = int(rng.integers(1, 500))
+    t0 = rng.integers(0, 300, E)
+    t1 = t0 + rng.integers(1, 60, E)
+    events = np.unique(np.concatenate([t0, t1]))
+    si = np.searchsorted(events, t0)
+    ei = np.searchsorted(events, t1)
+    s = rng.integers(0, m, E)
+    r = rng.integers(0, m, E)
+    K = events.size - 1
+    got = interval_alphas(si, ei, s, r, K, m, block_k=64)
+    ref = np.asarray(alphas_ref(build_delta(
+        jnp.asarray(si), jnp.asarray(ei), jnp.asarray(s), jnp.asarray(r), K, m)))
+    assert (got == ref).all()
+
+
+def test_coflow_merge_empty():
+    assert interval_alphas(np.zeros(0, int), np.zeros(0, int),
+                           np.zeros(0, int), np.zeros(0, int), 0, 4).size == 0

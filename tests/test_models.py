@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (reduced same-family configs, one forward +
+train step on CPU, shape/NaN asserts) and serving-path consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, shape_applicable
+from repro.models import (decode_step, encdec_decode_step, encdec_loss,
+                          encdec_prefill, init_decode_cache, init_encdec,
+                          init_lm, init_vlm, lm_forward, lm_loss, prefill,
+                          vlm_loss, vlm_prefill)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_loss(arch):
+    cfg = get_config(arch).smoke()
+    B, S = 2, 32
+    if cfg.family == "encdec":
+        params = init_encdec(cfg, KEY)
+        frames = jax.random.normal(KEY, (B, cfg.encoder_seq, cfg.d_model))
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        loss = encdec_loss(cfg, params, frames, toks, toks)
+    elif cfg.family == "vlm":
+        params = init_vlm(cfg, KEY)
+        patches = jax.random.normal(KEY, (B, cfg.n_image_tokens, cfg.d_model))
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        loss = vlm_loss(cfg, params, patches, toks, toks)
+    else:
+        params = init_lm(cfg, KEY)
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        logits, aux = lm_forward(cfg, params, toks)
+        assert logits.shape == (B, S, cfg.padded_vocab)
+        assert jnp.isfinite(logits).all()
+        loss = lm_loss(cfg, params, toks, toks)
+    assert np.isfinite(float(loss)), arch
+
+
+@pytest.mark.parametrize("arch", ["tinyllama_1_1b", "mamba2_2_7b",
+                                  "jamba_1_5_large", "qwen3_moe_235b"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_config(arch).smoke()
+    params = init_lm(cfg, KEY)
+    B, S, P = 2, 24, 20
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, _ = lm_forward(cfg, params, toks)
+    lg, cache = prefill(cfg, params, toks[:, :P])
+
+    def pad_kv(x):
+        if x.ndim == 5 and x.shape[2] == P:
+            return jnp.pad(x, ((0, 0), (0, 0), (0, S - P), (0, 0), (0, 0)))
+        return x
+
+    cache = {"layers": jax.tree.map(pad_kv, cache["layers"]),
+             "length": cache["length"]}
+    errs = [float(jnp.abs(lg - full[:, P - 1, :cfg.vocab]).max())]
+    for t in range(P, S):
+        lg, cache = decode_step(cfg, params, cache, toks[:, t:t + 1])
+        errs.append(float(jnp.abs(lg - full[:, t, :cfg.vocab]).max()))
+    assert max(errs) < 2e-3, (arch, errs)
+
+
+def test_encdec_decode_consistency():
+    cfg = get_config("whisper_large_v3").smoke()
+    params = init_encdec(cfg, KEY)
+    B, S = 2, 12
+    frames = jax.random.normal(KEY, (B, cfg.encoder_seq, cfg.d_model))
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    from repro.models import encdec_forward
+    full = encdec_forward(cfg, params, frames, toks)
+    lg, cache = encdec_prefill(cfg, params, frames, toks[:, :S - 3],
+                               capacity=S)
+    errs = [float(jnp.abs(lg - full[:, S - 4, :cfg.vocab]).max())]
+    for t in range(S - 3, S):
+        lg, cache = encdec_decode_step(cfg, params, cache, toks[:, t:t + 1])
+        errs.append(float(jnp.abs(lg - full[:, t, :cfg.vocab]).max()))
+    assert max(errs) < 2e-3, errs
+
+
+def test_vlm_prefill_shapes():
+    cfg = get_config("llava_next_mistral_7b").smoke()
+    params = init_vlm(cfg, KEY)
+    patches = jax.random.normal(KEY, (1, cfg.n_image_tokens, cfg.d_model))
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    logits, cache = vlm_prefill(cfg, params, patches, toks)
+    assert logits.shape == (1, cfg.vocab)
+    assert int(cache["length"]) == cfg.n_image_tokens + 8
+
+
+def test_shape_skip_rules():
+    # long_500k runs only for sub-quadratic stacks
+    runs = {a: dict((s, ok) for s, ok, _ in cells(a)) for a in ARCH_IDS}
+    assert runs["mamba2_2_7b"]["long_500k"]
+    assert runs["jamba_1_5_large"]["long_500k"]
+    for a in ("qwen2_5_32b", "tinyllama_1_1b", "whisper_large_v3",
+              "llava_next_mistral_7b", "qwen3_moe_235b"):
+        assert not runs[a]["long_500k"]
+    for a in ARCH_IDS:  # every other cell runs everywhere
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert runs[a][s]
+
+
+def test_exact_assigned_configs():
+    # spot-check the assignment table was transcribed exactly
+    c = get_config("qwen2.5-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (64, 5120, 40, 8, 27648, 152064) and c.qkv_bias
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k) == (94, 4096, 128, 8)
+    c = get_config("jamba-1.5-large-398b")
+    assert c.n_layers == 72 and sum(
+        1 for s in c.period if s.kind == "attn") * c.n_periods == 9
+    c = get_config("mamba2-2.7b")
+    assert c.n_layers == 64 and c.ssm.d_state == 128
+    c = get_config("granite-moe-3b-a800m")
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff_expert) == (40, 8, 512)

@@ -1,0 +1,106 @@
+"""Partition rules, the coflow collective planner, and the serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.partition import param_pspecs, zero_pspecs
+from repro.dist.planner import (CollectiveOp, coflows_from_step,
+                                extract_collectives, plan,
+                                bucket_order_from_plan)
+from repro.launch.specs import abstract_params
+
+
+def test_param_pspecs_rules():
+    cfg = get_config("qwen3_moe_235b")
+    params = abstract_params(cfg)
+    specs = param_pspecs(params)
+    flat = {"/".join(str(getattr(k, "key", k)) for k in path): s
+            for path, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]}
+    assert flat["embed"] == P("model", None)
+    assert flat["unembed"] == P(None, "model")
+    wq = [v for k, v in flat.items() if k.endswith("wq")][0]
+    assert wq == P(None, None, "model")          # stacked + TP on flat dim
+    moe_gate = [v for k, v in flat.items() if "moe/w_gate" in k][0]
+    assert moe_gate == P(None, "model", None, None)  # EP on experts
+    norm = [v for k, v in flat.items() if k.endswith("final_norm/scale")][0]
+    assert norm in (P(), P(None))  # replicated (both spellings equivalent)
+
+
+def test_zero_pspecs_divisibility():
+    import os
+    cfg = get_config("tinyllama-1.1b")
+    params = abstract_params(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    zp = zero_pspecs(params, mesh)  # dp size 1: everything stays legal
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_leaves(zp, is_leaf=lambda x: isinstance(x, P))):
+        for i, ax in enumerate(tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            if ax is not None:
+                size = np.prod([mesh.shape[a] for a in
+                                (ax if isinstance(ax, tuple) else (ax,))])
+                assert leaf.shape[i] % size == 0
+
+
+def test_extract_collectives_parses_hlo():
+    hlo = """
+  %all-reduce.1 = bf16[1024,128]{1,0} all-reduce(bf16[1024,128]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4096]{0} all-gather(f32[256]{0} %y), replica_groups=[8,2]<=[16]
+  %a2a.2 = bf16[64,32]{1,0} all-to-all(bf16[64,32]{1,0} %z), replica_groups={{0,4,8,12}}
+"""
+    ops = extract_collectives(hlo)
+    assert [o.kind for o in ops] == ["all-reduce", "all-gather", "all-to-all"]
+    assert ops[0].bytes == 1024 * 128 * 2
+    assert ops[0].axis == "model"     # consecutive ids
+    assert ops[2].axis == "data"      # strided ids
+
+
+def test_plan_and_bucket_translation():
+    rng = np.random.default_rng(0)
+    ops = [CollectiveOp("all-reduce", float(rng.integers(2**20, 2**24)), i,
+                        "model" if i % 2 else "data") for i in range(12)]
+    inst = coflows_from_step(ops, rows=4, cols=4, n_buckets=4)
+    assert inst.n == 4
+    res = plan(inst)
+    assert sorted(res.order) == [0, 1, 2, 3]
+    buckets = bucket_order_from_plan(res, [f"p{i}" for i in range(8)])
+    assert sorted(x for b in buckets for x in b) == [f"p{i}" for i in range(8)]
+
+
+def test_planner_multi_tenant_makespan_gain():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.planner_ab import multi_tenant_instance
+    from repro.core import gdm, om_alg
+    inst = multi_tenant_instance(seed=2)
+    g = gdm(inst, beta=10.0, rng=np.random.default_rng(1))
+    o = om_alg(inst)
+    assert g.makespan < o.makespan  # interleaving shortens the phase
+
+
+def test_serving_engine_fifo_vs_coflow():
+    from repro.serve import Request, ServeConfig, ServingEngine
+    from repro.train.step import init_params
+    cfg = get_config("qwen3-1.7b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def reqs():
+        return [Request(rid=i,
+                        tokens=rng.integers(1, cfg.vocab, size=6),
+                        max_new=4, weight=float(1 + (i % 3)), arrival=0.0)
+                for i in range(6)]
+
+    out = {}
+    for mode in ("coflow", "fifo"):
+        eng = ServingEngine(cfg, params, ServeConfig(slots=2, capacity=32,
+                                                     admission=mode))
+        out[mode] = eng.run(reqs())
+        assert out[mode]["completed"] == 6
+    # both complete; admission ordering is exercised (values may differ)
+    assert out["coflow"]["steps"] > 0

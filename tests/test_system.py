@@ -1,0 +1,49 @@
+"""End-to-end behaviour tests: the paper pipeline (workload -> schedule ->
+metrics -> verification) and the framework drivers (train N steps with
+checkpointing on a real reduced model; batched serving)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+
+
+def test_paper_pipeline_end_to_end():
+    from repro.core import (backfill, gdm, om_alg, paper_workload,
+                            verify_schedule, workload_stats)
+    inst = paper_workload(m=15, mu_bar=4, seed=0, scale=0.06, rooted=True)
+    st = workload_stats(inst)
+    assert st["n_jobs"] >= 2 and st["min_flow"] >= 1
+    g = gdm(inst, rng=np.random.default_rng(0), rooted=True, decompose=True)
+    verify_schedule(inst, g)
+    o = om_alg(inst, decompose=True)
+    verify_schedule(inst, o)
+    bf = backfill(g)
+    assert bf.makespan <= g.makespan + 1e-6
+    assert g.twct() > 0 and o.twct() > 0 and bf.twct() > 0
+
+
+def test_train_driver_end_to_end(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "tinyllama-1.1b",
+         "--smoke", "--steps", "8", "--seq-len", "32", "--global-batch", "4",
+         "--ckpt-dir", str(tmp_path)],
+        env=ENV, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    stats = json.loads(out.stdout.strip().splitlines()[-1])
+    assert stats["steps"] == 8 and np.isfinite(stats["last_loss"])
+
+
+def test_serve_driver_end_to_end():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+         "--requests", "4", "--max-new", "4"],
+        env=ENV, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    stats = json.loads(out.stdout.strip().splitlines()[-1])
+    assert stats["completed"] == 4

@@ -1,0 +1,93 @@
+"""Timeline machinery, backfilling, and the online driver."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (backfill, gdm, om_alg, paper_workload,
+                        poisson_releases, simulate_online, theta0, twct)
+from repro.core.timeline import EdgeIntervals, _alphas_vectorized
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 5000), m=st.integers(2, 12), e=st.integers(1, 80))
+def test_alpha_sweep_matches_bruteforce(seed, m, e):
+    rng = np.random.default_rng(seed)
+    t0 = rng.integers(0, 100, e)
+    t1 = t0 + rng.integers(1, 40, e)
+    s = rng.integers(0, m, e)
+    r = rng.integers(0, m, e)
+    edges = EdgeIntervals(t0.astype(np.int64), t1.astype(np.int64),
+                          s.astype(np.int64), r.astype(np.int64))
+    events = np.unique(np.concatenate([t0, t1]))
+    alphas = _alphas_vectorized(events, edges, m, chunk=16)
+    # brute force
+    for k in range(len(events) - 1):
+        mid = (events[k] + events[k + 1]) / 2
+        act = (t0 <= mid) & (mid < t1)
+        cs = np.bincount(s[act], minlength=m)
+        cr = np.bincount(r[act], minlength=m)
+        assert alphas[k] == max(cs.max(initial=0), cr.max(initial=0))
+
+
+def test_backfill_never_hurts_makespan_and_conserves():
+    for seed in range(3):
+        inst = paper_workload(m=10, mu_bar=3, seed=seed, scale=0.05)
+        s = gdm(inst, rng=np.random.default_rng(seed))
+        bf = backfill(s)
+        assert bf.makespan <= s.makespan + 1e-6
+        assert bf.twct() <= s.twct() + 1e-6
+        # conservation: transcript totals == demand
+        tot = {}
+        for e in bf.transcript.entries:
+            tot[(e.jid, e.cid)] = tot.get((e.jid, e.cid), 0.0) + float(e.units.sum())
+        for j in inst.jobs:
+            for c in j.coflows:
+                want = float(c.demand.sum())
+                assert abs(tot.get((j.jid, c.cid), 0.0) - want) < 1e-6
+
+
+def test_backfill_respects_precedence_and_release():
+    inst = paper_workload(m=10, mu_bar=4, seed=2, scale=0.05, rooted=True)
+    import dataclasses
+    jobs = [dataclasses.replace(j, release=20 * i) for i, j in enumerate(inst.jobs)]
+    from repro.core import Instance
+    inst = Instance(inst.m, jobs)
+    s = gdm(inst, rng=np.random.default_rng(0), rooted=True)
+    bf = backfill(s)
+    start = {}
+    end = {}
+    for e in bf.transcript.entries:
+        if e.units.sum() > 0:
+            k = (e.jid, e.cid)
+            start[k] = min(start.get(k, np.inf), e.t0)
+            end[k] = max(end.get(k, 0.0), e.t1)
+    by_id = {j.jid: j for j in inst.jobs}
+    for (jid, cid), t0 in start.items():
+        assert t0 >= by_id[jid].release - 1e-6
+        for a, b in by_id[jid].edges:
+            if b == cid and (jid, a) in end:
+                assert t0 >= end[(jid, a)] - 1e-6
+
+
+@pytest.mark.parametrize("algo", ["gdm", "om"])
+def test_online_completes_everything(algo):
+    base = paper_workload(m=8, mu_bar=3, seed=1, scale=0.04)
+    inst = poisson_releases(base, theta=theta0(base) * 5, seed=1)
+    if algo == "gdm":
+        sched = lambda sub: gdm(sub, rng=np.random.default_rng(0)).transcript()
+    else:
+        sched = lambda sub: om_alg(sub).transcript()
+    res = simulate_online(inst, sched)
+    assert set(res.job_completions) == {j.jid for j in inst.jobs}
+    for j in inst.jobs:
+        assert res.job_completions[j.jid] >= j.release
+    assert res.twct() > 0
+
+
+def test_online_response_reasonable_vs_offline():
+    base = paper_workload(m=8, mu_bar=3, seed=3, scale=0.04)
+    # zero arrivals == offline: same completions as direct scheduling
+    res = simulate_online(base, lambda sub: om_alg(sub).transcript())
+    direct = om_alg(base)
+    for jid, t in direct.job_completions().items():
+        assert abs(res.job_completions[jid] - t) < 1e-6

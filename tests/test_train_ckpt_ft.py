@@ -1,0 +1,151 @@
+"""Training substrate: optimizer, microbatching equivalence, bucket-order
+numeric neutrality, compression; checkpoint save/restore; crash/resume
+bit-exactness; straggler monitor; elastic restore."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.ckpt import CheckpointManager, latest_step, restore, save
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.ft import FTConfig, StragglerMonitor, TrainRunner
+from repro.train.optim import OptConfig, adamw_init, adamw_update, lr_at
+from repro.train.step import build_train_step, init_train_state
+
+CFG = get_config("tinyllama-1.1b").smoke()
+OPT = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+
+
+def _batch(seed=0, B=4, S=32):
+    data = SyntheticTokens(CFG, DataConfig(seq_len=S, global_batch=B, seed=seed))
+    return data.batch_at(0)
+
+
+def test_lr_schedule():
+    assert float(lr_at(OPT, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_at(OPT, jnp.asarray(2))) - OPT.lr) < 1e-9
+    assert float(lr_at(OPT, jnp.asarray(50))) >= OPT.lr * OPT.min_lr_ratio - 1e-9
+
+
+def test_adamw_moves_params_and_clips():
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 100.0, state.params)
+    new_p, new_s, stats = adamw_update(state.params, grads, state.opt, OPT)
+    assert float(stats["grad_norm"]) > OPT.grad_clip  # clip engaged
+    diffs = [float(jnp.abs(a - b).max()) for a, b in
+             zip(jax.tree.leaves(new_p), jax.tree.leaves(state.params))]
+    assert max(diffs) > 0
+
+
+def test_loss_decreases_over_training():
+    step = jax.jit(build_train_step(CFG, OPT))
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    data = SyntheticTokens(CFG, DataConfig(seq_len=32, global_batch=4, seed=0))
+    losses = []
+    for i in range(25):
+        state, metrics = step(state, data.batch_at(i))
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05
+
+
+def test_microbatching_matches_full_batch():
+    b = _batch(B=8)
+    s1 = init_train_state(CFG, jax.random.PRNGKey(0))
+    s2 = init_train_state(CFG, jax.random.PRNGKey(0))
+    full = jax.jit(build_train_step(CFG, OPT, micro_steps=1))
+    micro = jax.jit(build_train_step(CFG, OPT, micro_steps=4))
+    s1, m1 = full(s1, b)
+    s2, m2 = micro(s2, b)
+    # same tokens, same update up to accumulation-order float noise
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    diff = max(float(jnp.abs(a - b_).max()) for a, b_ in
+               zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)))
+    assert diff < 5e-3
+
+
+def test_bucket_order_is_numerically_neutral():
+    from repro.dist.partition import _path_str
+    b = _batch()
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    paths = [_path_str(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(state.params)[0]]
+    order = [paths[len(paths) // 2:], paths[: len(paths) // 2]]  # reversed buckets
+    plain = jax.jit(build_train_step(CFG, OPT))
+    bucketed = jax.jit(build_train_step(CFG, OPT, bucket_order=order))
+    s1, m1 = plain(init_train_state(CFG, jax.random.PRNGKey(0)), b)
+    s2, m2 = bucketed(init_train_state(CFG, jax.random.PRNGKey(0)), b)
+    diff = max(float(jnp.abs(a - b_).max()) for a, b_ in
+               zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)))
+    assert diff == 0.0  # ordering barriers must not change the math
+
+
+def test_grad_compression_trains():
+    step = jax.jit(build_train_step(CFG, OPT, grad_compression=True))
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    data = SyntheticTokens(CFG, DataConfig(seq_len=32, global_batch=4, seed=0))
+    for i in range(8):
+        state, metrics = step(state, data.batch_at(i))
+    assert np.isfinite(float(metrics["loss"]))
+
+
+# --- checkpointing ----------------------------------------------------------
+
+def test_save_restore_roundtrip(tmp_path):
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    save(state, tmp_path, 7, extra={"note": "x"})
+    assert latest_step(tmp_path) == 7
+    like = jax.eval_shape(lambda: init_train_state(CFG, jax.random.PRNGKey(0)))
+    restored, manifest = restore(like, tmp_path)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, every=1, keep=2, async_write=True)
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(state, s)
+    mgr.wait()
+    assert latest_step(tmp_path) == 4
+    import re
+    steps = sorted(p.name for p in tmp_path.iterdir()
+                   if re.fullmatch(r"step_\d+", p.name))
+    assert len(steps) == 2  # retention
+
+
+def test_crash_resume_bit_exact(tmp_path):
+    class Boom(Exception):
+        pass
+
+    def hook(step):
+        if step == 7:
+            raise Boom()
+
+    def mk(h=None, d="a"):
+        return TrainRunner(CFG, OPT,
+                           DataConfig(seq_len=32, global_batch=4, seed=0),
+                           FTConfig(ckpt_dir=str(tmp_path / d), ckpt_every=3),
+                           fault_hook=h)
+
+    r1 = mk(hook)
+    with pytest.raises(Boom):
+        r1.run(12)
+    r2 = mk()
+    resumed = r2.run(12)
+    assert r2.metrics_log[0]["step"] == 6  # resumed from step-6 checkpoint
+    clean = mk(d="b").run(12)
+    for a, b in zip(jax.tree.leaves(resumed.params), jax.tree.leaves(clean.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=3.0)
+    for s in range(10):
+        assert not mon.observe(s, 0.1)
+    assert mon.observe(10, 1.0)       # 10x the EWMA -> flagged
+    assert mon.flagged == [(10, 1.0)]
+    assert not mon.observe(11, 0.1)   # baseline not poisoned
