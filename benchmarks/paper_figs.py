@@ -18,8 +18,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (backfill, gdm, om_alg, paper_workload,
-                        poisson_releases, simulate_online, theta0,
+from repro.core import (clear_caches, make_scheduler, paper_workload,
+                        plan_online, poisson_releases, theta0,
                         workload_stats)
 
 from .common import emit, save_json, timed
@@ -28,16 +28,22 @@ DEFAULT_SCALE = 0.35
 DEFAULT_SEEDS = 3
 
 
-def _pair(inst, rooted: bool, beta: float, seed: int, bf: bool):
+def _pair_schedulers(rooted: bool, beta: float, seed: int):
     # rooted sweeps use the flat DMA-RT fast path (nested=False): identical
     # delay-and-merge principle, one global fix-up, no per-job packet
     # decomposition — tests check nested/flat agreement on small instances
-    g = gdm(inst, beta=beta, rng=np.random.default_rng(seed), rooted=rooted,
-            nested=False)
-    o = om_alg(inst)
+    g = make_scheduler("gdm_rt" if rooted else "gdm", beta=beta, seed=seed,
+                       nested=False)
+    o = make_scheduler("om_alg")
+    return g, o
+
+
+def _pair(inst, rooted: bool, beta: float, seed: int, bf: bool):
+    g, o = _pair_schedulers(rooted, beta, seed)
+    gp, op = g.plan_full(inst), o.plan_full(inst)
     if bf:
-        return backfill(g).twct(), backfill(o).twct()
-    return g.twct(), o.twct()
+        return gp.backfilled().twct(), op.backfilled().twct()
+    return gp.twct(), op.twct()
 
 
 def fig_a(rooted: bool, scale: float = DEFAULT_SCALE, seeds: int = DEFAULT_SEEDS,
@@ -48,18 +54,18 @@ def fig_a(rooted: bool, scale: float = DEFAULT_SCALE, seeds: int = DEFAULT_SEEDS
         gains, gains_bf = [], []
         us = 0.0
         for seed in range(seeds):
-            # one instance per seed: the BNA isolated schedules are memoized
-            # on the coflows and shared by all four algorithm variants
+            # one instance per seed: BNA decompositions (bytes-keyed LRU)
+            # and the Algorithm 5 order (state-keyed LRU) are shared by all
+            # four algorithm variants
             inst = paper_workload(m=m, mu_bar=5, seed=seed, scale=scale,
                                   rooted=rooted)
-            (pair, dt) = timed(lambda: (
-                gdm(inst, beta=beta, rng=np.random.default_rng(seed),
-                    rooted=rooted, nested=False),
-                om_alg(inst)))
+            gs, os_ = _pair_schedulers(rooted, beta, seed)
+            (pair, dt) = timed(lambda: (gs.plan_full(inst),
+                                        os_.plan_full(inst)))
             g, o = pair
             us += dt
             gains.append(1 - g.twct() / o.twct())
-            gains_bf.append(1 - backfill(g).twct() / backfill(o).twct())
+            gains_bf.append(1 - g.backfilled().twct() / o.backfilled().twct())
         emit(f"{name}_m{m}", us / seeds,
              f"gain_pct={100 * float(np.mean(gains)):.1f}")
         emit(f"{name}-BF_m{m}", us / seeds,
@@ -99,26 +105,26 @@ def fig_c(rooted: bool, scale: float = DEFAULT_SCALE, seeds: int = 2,
     for a in factors:
         gains = []
         us = 0.0
+        hit_rates = []
         for seed in range(seeds):
             base = paper_workload(m=m, mu_bar=5, seed=seed, scale=scale,
                                   rooted=rooted)
             inst = poisson_releases(base, theta=a * theta0(base), seed=seed)
-
-            def g_sched(sub):
-                return gdm(sub, beta=beta, rng=np.random.default_rng(seed),
-                           rooted=rooted, nested=False).transcript()
-
-            def o_sched(sub):
-                return om_alg(sub).transcript()
-
+            g_sched, o_sched = _pair_schedulers(rooted, beta, seed)
+            # cold start per measurement: the reported hit rate must come
+            # from within-run reschedule reuse, not earlier sweep points
+            clear_caches()
             (rg, ro), dt = timed(
-                lambda: (simulate_online(inst, g_sched),
-                         simulate_online(inst, o_sched)))
+                lambda: (plan_online(inst, g_sched),
+                         plan_online(inst, o_sched)))
             gains.append(1 - rg.twct() / ro.twct())
+            hit_rates.append(rg.stats["bna"]["hit_rate"])
             us += dt
         emit(f"{name}_a{a}", us / seeds,
-             f"gain_pct={100 * float(np.mean(gains)):.1f}")
-        rows.append({"a": a, "gain": float(np.mean(gains))})
+             f"gain_pct={100 * float(np.mean(gains)):.1f};"
+             f"bna_hit_pct={100 * float(np.mean(hit_rates)):.1f}")
+        rows.append({"a": a, "gain": float(np.mean(gains)),
+                     "bna_hit_rate": float(np.mean(hit_rates))})
     save_json(name, rows)
     return rows
 
@@ -133,8 +139,9 @@ def fig4_beta(scale: float = DEFAULT_SCALE, seeds: int = 2,
             for seed in range(seeds):
                 inst = paper_workload(m=m, mu_bar=5, seed=seed, scale=scale,
                                       rooted=True)
-                s, dt = timed(gdm, inst, beta=beta, nested=False,
-                              rng=np.random.default_rng(seed), rooted=True)
+                sched = make_scheduler("gdm_rt", beta=beta, seed=seed,
+                                       nested=False)
+                s, dt = timed(sched.plan_full, inst)
                 vals.append(s.twct())
                 us += dt
             emit(f"fig4_m{m}_beta{beta}", us / seeds,
@@ -150,8 +157,10 @@ def rsd(scale: float = DEFAULT_SCALE, runs: int = 10, m: int = 50) -> dict:
     out = {}
     for rooted in (False, True):
         inst = paper_workload(m=m, mu_bar=5, seed=0, scale=scale, rooted=rooted)
-        vals = [gdm(inst, beta=2.0, rng=np.random.default_rng(1000 + r),
-                    rooted=rooted, nested=False).twct() for r in range(runs)]
+        name = "gdm_rt" if rooted else "gdm"
+        vals = [make_scheduler(name, beta=2.0, seed=1000 + r,
+                               nested=False).plan_full(inst).twct()
+                for r in range(runs)]
         r = float(np.std(vals) / np.mean(vals))
         key = "G-DM-RT" if rooted else "G-DM"
         out[key] = r

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Coflow, Instance, Job, gdm, om_alg
+from repro.core import Coflow, Instance, Job, make_scheduler
 
 from .common import emit, save_json, timed
 
@@ -76,9 +76,10 @@ def run(seeds: int = 3) -> list[dict]:
         mk_gain, tw_gain, us = [], [], 0.0
         for seed in range(seeds):
             inst = make(seed)
-            (g, o), dt = timed(lambda: (
-                gdm(inst, beta=10.0, rng=np.random.default_rng(seed)),
-                om_alg(inst)))
+            g_sched = make_scheduler("gdm", beta=10.0, seed=seed)
+            o_sched = make_scheduler("om_alg")
+            (g, o), dt = timed(lambda: (g_sched.plan_full(inst),
+                                        o_sched.plan_full(inst)))
             us += dt
             mk_gain.append(1 - g.makespan / o.makespan)
             tw_gain.append(1 - g.twct() / o.twct())

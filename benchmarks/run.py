@@ -27,8 +27,16 @@ def main() -> None:
                     help="published workload scale (longest)")
     ap.add_argument("--only", default=None,
                     help="comma list: figs,online,beta,rsd,planner,kernels,roofline")
+    ap.add_argument("--alpha-backend", default=None,
+                    choices=("auto", "numpy", "pallas"),
+                    help="route merge_and_fix alphas through this backend "
+                         "(default: REPRO_ALPHA_BACKEND or auto)")
     args = ap.parse_args()
     args.fast = not (args.standard or args.paper)
+
+    if args.alpha_backend:
+        from repro.core import set_alpha_backend
+        set_alpha_backend(args.alpha_backend)
 
     if args.fast:
         scale, seeds, ms, mus, factors = 0.12, 2, (10, 30, 50), (2, 5, 10), (2, 25)

@@ -1,11 +1,10 @@
 """Quickstart: schedule a multi-stage coflow workload with the paper's
-G-DM algorithm and compare against the prior-art O(m)Alg baseline.
+G-DM algorithm and compare against the prior-art O(m)Alg baseline, all
+through the unified scheduler engine (repro.core.engine).
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import (backfill, gdm, om_alg, paper_workload,
+from repro.core import (available_schedulers, paper_workload, plan,
                         verify_schedule, workload_stats)
 
 
@@ -15,11 +14,11 @@ def main() -> None:
     # and job count (paper Fig 6a) — benchmarks/run.py sweeps the full range.
     inst = paper_workload(m=24, mu_bar=5, seed=3, scale=0.08, rooted=True)
     print("workload:", workload_stats(inst))
+    print("registered schedulers:", ", ".join(available_schedulers()))
 
-    sched = gdm(inst, beta=2.0, rng=np.random.default_rng(0), rooted=True,
-                decompose=True)
-    verify_schedule(inst, sched)     # capacity + precedence + conservation
-    base = om_alg(inst)
+    sched = plan(inst, "gdm_rt", beta=2.0, seed=0, decompose=True)
+    verify_schedule(inst, sched.schedule)  # capacity + precedence + conservation
+    base = plan(inst, "om_alg")
 
     print(f"G-DM-RT   TWCT = {sched.twct():12.0f}   makespan = {sched.makespan:10.0f}")
     print(f"O(m)Alg   TWCT = {base.twct():12.0f}   makespan = {base.makespan:10.0f}")
@@ -27,7 +26,7 @@ def main() -> None:
           "(tiny demo instance — gains grow with m and job count; "
           "benchmarks/run.py reproduces the paper's Fig 5/6 sweeps)")
 
-    bf_g, bf_o = backfill(sched), backfill(base)
+    bf_g, bf_o = sched.backfilled(), base.backfilled()
     print(f"with backfilling: G-DM-RT-BF {bf_g.twct():.0f} "
           f"vs O(m)Alg-BF {bf_o.twct():.0f}")
 

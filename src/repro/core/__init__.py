@@ -3,17 +3,21 @@ contribution, implemented faithfully: BNA, DMA, DMA-SRT, DMA-RT, the
 primal-dual job ordering, G-DM / G-DM-RT, the O(m)Alg baseline, backfilling,
 the online driver, and the paper's workload/verification machinery."""
 
+from .backend import (cache_stats, clear_caches, compute_alphas,
+                      set_alpha_backend, use_alpha_backend)
 from .backfill import BackfillResult, backfill
 from .baseline import om_alg
 from .bna import bna, verify_bna_schedule
-from .dma import dma, isolated_job_unit
+from .dma import cached_bna, dma, isolated_job_unit
 from .dma_srt import dma_rt, dma_srt, path_subjobs, srt_start_times
+from .engine import (PlanResult, Scheduler, available_schedulers,
+                     make_scheduler, plan, plan_online, register_scheduler)
 from .fsp_reduction import fsp_to_coflow_job
 from .gap_instance import (gap_bounds, gap_hand_schedule, gap_instance,
                            gap_optimal_schedule_length)
 from .gdm import gdm, group_jobs
 from .online import OnlineResult, simulate_online
-from .ordering import OrderResult, job_order
+from .ordering import OrderResult, cached_job_order, job_order
 from .result import CompositeSchedule, Transcript, twct
 from .simulator import verify_schedule
 from .timeline import FinalSchedule, UnitSchedule, merge_and_fix

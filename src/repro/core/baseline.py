@@ -17,7 +17,7 @@ from __future__ import annotations
 import math
 
 from .dma import isolated_job_unit
-from .ordering import job_order
+from .ordering import cached_job_order
 from .result import CompositeSchedule
 from .timeline import merge_and_fix
 from .types import Instance
@@ -27,7 +27,7 @@ __all__ = ["om_alg"]
 
 def om_alg(instance: Instance, decompose: bool = False) -> CompositeSchedule:
     by_id = {j.jid: j for j in instance.jobs}
-    res = job_order(instance)
+    res = cached_job_order(instance)
     units = []
     delays: dict[int, int] = {}
     t = 0

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .bna import bna
+from .backend import bna_pieces
 from .timeline import (EdgeIntervals, FinalSchedule, UnitSchedule,
                        merge_and_fix, unit_from_coflow_plan)
 from .types import Coflow, Job, aggregate_size, topological_order
@@ -20,13 +20,13 @@ __all__ = ["isolated_job_unit", "draw_delays", "dma", "cached_bna"]
 
 
 def cached_bna(c: Coflow) -> list:
-    """BNA decomposition memoized on the Coflow: G-DM, DMA-RT, O(m)Alg and
-    every beta point of a sweep share the same isolated schedules."""
-    pieces = getattr(c, "_bna_pieces", None)
-    if pieces is None:
-        pieces = bna(c.demand)
-        c._bna_pieces = pieces
-    return pieces
+    """BNA decomposition memoized on the demand *bytes* (bounded LRU in
+    backend.py): G-DM, DMA-RT, O(m)Alg, every beta point of a sweep, AND
+    every online reschedule share the same isolated schedules.  The old
+    per-object memo missed across online reschedules because _sub_instance
+    builds fresh Coflow objects each arrival; the bytes key hits whenever
+    the remaining demand is unchanged."""
+    return bna_pieces(c.demand)
 
 
 def isolated_job_unit(job: Job, start: int = 0) -> UnitSchedule:
@@ -67,7 +67,7 @@ def dma(
     rng: np.random.Generator | None = None,
     origin: int = 0,
     decompose: bool = False,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
 ) -> FinalSchedule:
     """Schedule a set of general-DAG jobs; makespan O(mu * g(m)) x OPT whp
     (Theorem 2)."""

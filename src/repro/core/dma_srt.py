@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from .bna import bna
 from .dma import cached_bna, draw_delays
 from .timeline import FinalSchedule, UnitSchedule, merge_and_fix, unit_from_coflow_plan
 from .types import (Job, aggregate_size, children_of, coflow_layers,
@@ -101,7 +100,7 @@ def dma_srt(
     origin: int = 0,
     decompose: bool = True,
     require_tree: bool = True,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
 ) -> FinalSchedule:
     """Single rooted-tree job; makespan O(sqrt(mu) * h(m, mu)) x OPT whp
     (Theorem 3)."""
@@ -123,7 +122,7 @@ def dma_rt(
     origin: int = 0,
     decompose: bool = False,
     require_tree: bool = True,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
     nested: bool = True,
 ) -> FinalSchedule:
     """Multiple rooted-tree jobs; makespan O(sqrt(mu) g(m) h(m, mu)) x OPT

@@ -21,7 +21,7 @@ import numpy as np
 
 from .dma import dma
 from .dma_srt import dma_rt
-from .ordering import job_order
+from .ordering import cached_job_order
 from .result import CompositeSchedule
 from .types import Instance, effective_size
 
@@ -65,14 +65,14 @@ def gdm(
     rng: np.random.Generator | None = None,
     rooted: bool = False,
     decompose: bool = False,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
     nested: bool = True,
 ) -> CompositeSchedule:
     """G-DM (rooted=False) / G-DM-RT (rooted=True)."""
     if rng is None:
         rng = np.random.default_rng(0)
     by_id = {j.jid: j for j in instance.jobs}
-    res = job_order(instance)
+    res = cached_job_order(instance)
     groups = group_jobs(instance, res.order)
     parts = []
     t_cur = 0

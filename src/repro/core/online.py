@@ -8,12 +8,16 @@ protocol. Completion times are measured from each job's arrival.
 The driver is scheduler-agnostic: it consumes a Transcript (executed
 transmissions) and truncates it at the next arrival with pro-rata flooring
 (integer packets — a partial window never over-counts).
+
+`scheduler` may be a plain callable, an engine Scheduler object, or a
+registered scheduler name (see core/engine.py); engine.plan_online is the
+stats-reporting incremental wrapper around this driver.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
@@ -31,6 +35,7 @@ class OnlineResult:
     job_completions: dict[int, float]     # absolute wall-clock completion
     instance: Instance
     reschedules: int
+    stats: dict = field(default_factory=dict)  # cache/wall stats (engine)
 
     def twct(self) -> float:
         """Sum of weighted response times (measured from arrival)."""
@@ -44,7 +49,19 @@ class OnlineResult:
         return max(self.job_completions.values(), default=0.0)
 
 
-def simulate_online(instance: Instance, scheduler: SchedulerFn) -> OnlineResult:
+def _resolve_scheduler(scheduler) -> SchedulerFn:
+    if isinstance(scheduler, str):
+        from .engine import make_scheduler
+
+        return make_scheduler(scheduler).plan
+    plan = getattr(scheduler, "plan", None)
+    if callable(plan) and not isinstance(scheduler, type):
+        return plan
+    return scheduler
+
+
+def simulate_online(instance: Instance, scheduler) -> OnlineResult:
+    scheduler = _resolve_scheduler(scheduler)
     jobs = sorted(instance.jobs, key=lambda j: (j.release, j.jid))
     remaining: dict[tuple[int, int], np.ndarray] = {
         (j.jid, c.cid): c.demand.astype(np.int64).copy()

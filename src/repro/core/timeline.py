@@ -338,16 +338,20 @@ def merge_and_fix(
     delays: dict[int, int] | None = None,
     origin: int = 0,
     decompose: bool = False,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
 ) -> FinalSchedule:
     """DMA Steps 3-4 (Lemma 6): delay, merge, and expand to feasibility.
 
     delays: per-uid integer delay (Step 2); default 0.
     decompose: also produce the packet-level schedule (BNA per merged
       interval) — needed for verification and for nesting into DMA-RT.
-    use_kernel: route alpha computation through the coflow_merge Pallas
-      kernel (interpret mode on CPU) instead of the numpy oracle.
+    use_kernel: alpha-computation backend override. None (default) follows
+      the global backend config (REPRO_ALPHA_BACKEND / backend.config);
+      True forces the coflow_merge Pallas kernel (interpret mode on CPU);
+      False forces the numpy oracle.
     """
+    from .backend import compute_alphas
+
     delays = delays or {}
     shifted: list[EdgeIntervals] = []
     for u in units:
@@ -360,16 +364,8 @@ def merge_and_fix(
     else:
         events = np.zeros(0, dtype=np.int64)
 
-    if use_kernel and edges.size:
-        from repro.kernels.coflow_merge import ops as _cm_ops
-
-        si = np.searchsorted(events, edges.t0)
-        ei = np.searchsorted(events, edges.t1)
-        alphas = np.asarray(_cm_ops.interval_alphas(
-            si, ei, np.asarray(edges.s), np.asarray(edges.r),
-            events.size - 1, m))
-    else:
-        alphas = _alphas_vectorized(events, edges, m)
+    force = None if use_kernel is None else ("pallas" if use_kernel else "numpy")
+    alphas = compute_alphas(events, edges, m, force=force)
 
     K = alphas.size
     lens = (events[1:] - events[:-1]) if K else np.zeros(0, dtype=np.int64)

@@ -1,0 +1,15 @@
+"""Distributed-systems layer: partition rules, the coflow collective
+planner, and gradient compression.
+
+``partition``   — PartitionSpec rule tables for every model family, ZeRO
+                  optimizer-state sharding, batch specs, mesh dp axes.
+``planner``     — the bridge between the paper's scheduler and a compiled
+                  train step: extract collectives from HLO, translate them
+                  to a coflow Instance on the pod fabric, plan it with the
+                  core engine (G-DM), and translate the planned order back
+                  into gradient-bucket launch order.
+``compression`` — simulated gradient compression (quantize-dequantize),
+                  shrinking the all-reduce payloads the planner schedules.
+"""
+
+__all__ = ["compression", "partition", "planner"]

@@ -1,0 +1,28 @@
+"""Simulated gradient compression (quantize-dequantize).
+
+Symmetric per-tensor int8 quantization applied to the gradient tree before
+the optimizer update: the all-reduce payload the collective planner
+schedules is the compressed one (4x smaller in bf16/f32 terms), and the
+round-trip error is what training absorbs.  Runs inside jit; float leaves
+only, everything else passes through untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_decompress"]
+
+
+def compress_decompress(grads, bits: int = 8):
+    """Quantize-dequantize every float leaf of `grads` to `bits` levels."""
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def q(g):
+        if not jnp.issubdtype(g.dtype, jnp.floating):
+            return g
+        amax = jnp.max(jnp.abs(g))
+        scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(g.dtype)
+        return (jnp.clip(jnp.round(g / scale), -qmax, qmax) * scale).astype(g.dtype)
+
+    return jax.tree.map(q, grads)

@@ -1,0 +1,118 @@
+"""Parameter/batch partition rules (GSPMD PartitionSpecs).
+
+Name-based rule table over the flattened param tree (see models/*.py for
+the layouts; every leaf is stacked on a leading period dim `nP`):
+
+  embed (V, D)            -> P("model", None)      vocab TP
+  unembed (D, V)          -> P(None, "model")      vocab TP
+  wq/wk/wv/w_gate/w_up    -> P(None, None, "model")   column split
+  wo/w_down (3D)          -> P(None, "model", None)   row split
+  moe w_gate/w_up/w_down  -> P(None, "model", None, None)  EP on experts
+    (moe_ffn_tp=True instead splits the ffn dim: the TP-over-experts
+     alternative layout the dry-run sweeps A/B)
+  ssm in_proj / out_proj  -> column / row split
+  norm scales, biases, router, ssm scalars -> replicated
+
+`zero_pspecs` upgrades the param specs for ZeRO optimizer state: each
+leaf's first still-unsharded, dp-divisible dimension is additionally
+sharded over the data axes.
+
+PartitionSpec subclasses tuple, so all tree construction here goes through
+flatten/unflatten with explicit paths — never tree-mapping over spec trees
+without `is_leaf`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspecs", "zero_pspecs", "shardings", "batch_pspecs",
+           "dp_axes"]
+
+_DP_AXIS_ORDER = ("pod", "data")
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel mesh axes, outermost first."""
+    return tuple(a for a in _DP_AXIS_ORDER if a in mesh.axis_names)
+
+
+def _path_str(path) -> str:
+    """'/'-joined tree path ('stack/l0/attn/wq') — the bucket-order key."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _leaf_rule(pathstr: str, name: str, nd: int, moe_ffn_tp: bool) -> P:
+    if name == "embed":
+        return P("model", None)
+    if name == "unembed":
+        return P(None, "model")
+    if name == "scale" or name == "router" or "norm" in pathstr:
+        return P()
+    if "moe" in pathstr and name in ("w_gate", "w_up", "w_down") and nd == 4:
+        if moe_ffn_tp:  # TP on the ffn dim instead of EP on experts
+            if name == "w_down":
+                return P(None, None, "model", None)
+            return P(None, None, None, "model")
+        return P(None, "model", None, None)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj") and nd == 3:
+        return P(None, None, "model")
+    if name in ("wo", "w_down", "out_proj") and nd == 3:
+        return P(None, "model", None)
+    return P(*([None] * nd))
+
+
+def param_pspecs(params, moe_ffn_tp: bool = False):
+    """PartitionSpec tree mirroring `params` (abstract or concrete)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in leaves:
+        pathstr = _path_str(path)
+        name = pathstr.rsplit("/", 1)[-1]
+        specs.append(_leaf_rule(pathstr, name, len(leaf.shape), moe_ffn_tp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero_pspecs(params, mesh: Mesh):
+    """ZeRO: param specs + data-axis sharding of the first free divisible
+    dim of each leaf (optimizer moments live fully sharded)."""
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp], dtype=np.int64)) \
+        if dp else 1
+    base = param_pspecs(params)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    base_specs = jax.tree_util.tree_leaves(
+        base, is_leaf=lambda x: isinstance(x, P))
+    out = []
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    for (path, leaf), spec in zip(leaves, base_specs):
+        nd = len(leaf.shape)
+        full = tuple(spec) + (None,) * (nd - len(tuple(spec)))
+        if dp_entry is None:
+            out.append(P(*full))
+            continue
+        upgraded = list(full)
+        for i, ax in enumerate(full):
+            if ax is None and leaf.shape[i] % max(dp_total, 1) == 0 \
+                    and leaf.shape[i] > 0:
+                upgraded[i] = dp_entry
+                break
+        out.append(P(*upgraded))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shardings(pspecs, mesh: Mesh):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs(batch, mesh: Mesh):
+    """Batch tree: leading dim sharded over the dp axes, rest replicated."""
+    dp = dp_axes(mesh)
+    entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    leaves, treedef = jax.tree_util.tree_flatten(batch)
+    return jax.tree_util.tree_unflatten(treedef, [P(entry)] * len(leaves))

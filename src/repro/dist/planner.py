@@ -1,0 +1,167 @@
+"""Coflow collective planner: schedule a compiled step's collectives with
+the paper's engine.
+
+Pipeline (benchmarks/planner_ab.py and the dry-run harness drive it):
+
+  1. `extract_collectives(hlo)` — parse the post-SPMD HLO for collective
+     ops: kind, payload bytes (result tensor), and which mesh axis the
+     replica groups span (consecutive device ids -> the minor "model" axis,
+     strided -> "data").
+  2. `coflows_from_step(ops, rows, cols, n_buckets)` — translate to a
+     coflow Instance on the rows x cols pod fabric: ops are bucketed into
+     jobs (contiguous program order, one job per gradient bucket); each op
+     becomes one coflow whose demand matrix is the op's traffic pattern
+     (ring over the axis its groups span; all-to-all is dense within
+     groups); program order within a bucket becomes Starts-After edges.
+  3. `plan(inst)` — run the core engine's G-DM over the instance and
+     compare with the naive program-order one-at-a-time makespan.
+  4. `bucket_order_from_plan(res, leaf_paths)` — translate the planned job
+     permutation back into gradient-bucket launch order for
+     `build_train_step(bucket_order=...)` (HLO dependency chains pin the
+     collective launch order — the knob the paper's schedule turns).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.types import Coflow, Instance, Job
+
+__all__ = ["CollectiveOp", "extract_collectives", "coflows_from_step",
+           "plan", "PlanOutcome", "bucket_order_from_plan"]
+
+_BYTES_PER_UNIT = float(2 ** 20)   # one demand unit == 1 MiB on the fabric
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\]\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+@dataclass
+class CollectiveOp:
+    """One collective in program order: kind, payload bytes, index, and the
+    mesh axis its replica groups span ("model" = minor/consecutive ids)."""
+
+    kind: str
+    bytes: float
+    idx: int
+    axis: str = "model"
+
+
+def extract_collectives(hlo_text: str) -> list[CollectiveOp]:
+    """Collectives of a compiled (post-SPMD) HLO module, program order."""
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        numel = int(np.prod([int(d) for d in dims.split(",")])) if dims else 1
+        nbytes = float(numel * _DTYPE_BYTES.get(dtype, 4))
+        axis = "model"
+        g = _GROUPS_RE.search(line)
+        if g:
+            ids = [int(x) for x in g.group(1).split(",")]
+            consecutive = all(b - a == 1 for a, b in zip(ids, ids[1:]))
+            axis = "model" if consecutive or len(ids) < 2 else "data"
+        ops.append(CollectiveOp(kind, nbytes, len(ops), axis))
+    return ops
+
+
+def _op_demand(op: CollectiveOp, rows: int, cols: int) -> np.ndarray:
+    """Traffic pattern of one collective on the rows x cols fabric.
+
+    "model"-axis groups are the rows (consecutive device ids); "data"-axis
+    groups are the columns.  Ring algorithms move ~bytes per hop, so each
+    directed ring edge carries the op's unit count; all-to-all is dense
+    within each group at units/(k-1) per pair."""
+    m = rows * cols
+    d = np.zeros((m, m), dtype=np.int64)
+    units = max(1, int(round(op.bytes / _BYTES_PER_UNIT)))
+    if op.axis == "model":
+        groups = [np.arange(r * cols, (r + 1) * cols) for r in range(rows)]
+    else:
+        groups = [np.arange(c, m, cols) for c in range(cols)]
+    for g in groups:
+        k = g.size
+        if k < 2:
+            continue
+        if op.kind == "all-to-all":
+            per = max(1, units // (k - 1))
+            for i in range(k):
+                for j in range(k):
+                    if i != j:
+                        d[g[i], g[j]] = per
+        else:  # ring: all-reduce / all-gather / reduce-scatter / permute
+            for i in range(k):
+                d[g[i], g[(i + 1) % k]] = units
+    return d
+
+
+def coflows_from_step(
+    ops: list[CollectiveOp], rows: int, cols: int, n_buckets: int,
+) -> Instance:
+    """Bucket the step's collectives into `n_buckets` chained jobs."""
+    m = rows * cols
+    ordered = sorted(ops, key=lambda o: o.idx)
+    chunks = [c for c in np.array_split(np.arange(len(ordered)), n_buckets)
+              if c.size]
+    jobs: list[Job] = []
+    for jid, chunk in enumerate(chunks):
+        coflows = [Coflow(jid, k, _op_demand(ordered[i], rows, cols))
+                   for k, i in enumerate(chunk)]
+        edges = [(k, k + 1) for k in range(len(coflows) - 1)]
+        jobs.append(Job(jid, coflows, edges, weight=1.0, release=0))
+    return Instance(m, jobs)
+
+
+@dataclass
+class PlanOutcome:
+    """Planned collective phase: job order + makespans vs naive."""
+
+    order: list[int]                  # planned job (bucket) permutation
+    planner_makespan: float
+    naive_makespan: float             # program-order one-at-a-time
+    schedule: object = None           # the engine PlanResult
+
+    @property
+    def makespan_gain(self) -> float:
+        if self.naive_makespan <= 0:
+            return 0.0
+        return 1.0 - self.planner_makespan / self.naive_makespan
+
+
+def plan(instance: Instance, beta: float = 10.0, seed: int = 0) -> PlanOutcome:
+    """Plan the collective phase with G-DM (engine scheduler "gdm")."""
+    from repro.core.engine import plan as engine_plan
+
+    g = engine_plan(instance, "gdm", beta=beta, seed=seed)
+    # naive: buckets one at a time in program order; each bucket is a chain
+    # of coflows, each taking exactly its effective size (BNA, Lemma 1)
+    naive = float(sum(c.D for j in instance.jobs for c in j.coflows))
+    return PlanOutcome(order=list(g.schedule.meta["order"]),
+                       planner_makespan=float(g.makespan),
+                       naive_makespan=naive, schedule=g)
+
+
+def bucket_order_from_plan(
+    res: PlanOutcome, leaf_paths: list[str],
+) -> list[list[str]]:
+    """Planned job permutation -> gradient-bucket launch order.
+
+    Splits `leaf_paths` into len(res.order) contiguous buckets (bucket j
+    holds job j's gradients) and emits them in the planned order, for
+    build_train_step(bucket_order=...)."""
+    chunks = np.array_split(np.asarray(leaf_paths, dtype=object),
+                            len(res.order))
+    return [list(chunks[j]) for j in res.order]

@@ -21,3 +21,14 @@ def default_interpret() -> bool:
     import jax
 
     return jax.default_backend() != "tpu"
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable pltpu compiler params: the class is named
+    `CompilerParams` on current jax and `TPUCompilerParams` on the 0.4.x
+    series this container ships."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -1,1 +1,1 @@
-from .ops import interval_alphas  # noqa: F401
+from .ops import edge_interval_alphas, interval_alphas  # noqa: F401

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import tpu_compiler_params
+
 
 def _merge_kernel(delta_ref, alpha_ref, carry_ref):
     ib = pl.program_id(0)
@@ -54,7 +56,7 @@ def coflow_merge_padded(
         out_specs=pl.BlockSpec((block_k, 1), lambda ib: (ib, 0)),
         out_shape=jax.ShapeDtypeStruct((K, 1), jnp.int32),
         scratch_shapes=[pltpu.VMEM((1, ports), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

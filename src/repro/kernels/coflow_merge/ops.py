@@ -38,3 +38,21 @@ def interval_alphas(
     dpad = jnp.pad(delta, ((0, k_pad), (0, p_pad)))
     out = coflow_merge_padded(dpad, block_k=bk, interpret=interpret)
     return np.asarray(out[:K, 0], dtype=np.int64)
+
+
+def edge_interval_alphas(
+    events: np.ndarray,  # (K+1,) sorted unique interval boundaries
+    t0: np.ndarray,      # (E,) edge activation start times
+    t1: np.ndarray,      # (E,) edge activation end times (exclusive)
+    s: np.ndarray,
+    r: np.ndarray,
+    m: int,
+    **kw,
+) -> np.ndarray:
+    """interval_alphas from raw edge-interval times: the merge_and_fix entry
+    point used by the engine's backend dispatch (core/backend.py).  Bins the
+    activation times into interval indices, then runs the kernel."""
+    si = np.searchsorted(events, t0)
+    ei = np.searchsorted(events, t1)
+    return interval_alphas(si, ei, np.asarray(s), np.asarray(r),
+                           int(events.size) - 1, m, **kw)

@@ -1,0 +1,10 @@
+"""Test-support utilities (optional-dependency shims).
+
+`repro.testing.hypothesis_compat` re-exports hypothesis when installed and
+otherwise provides a tiny deterministic fallback so the property-test
+modules still collect and run meaningfully without the dependency.
+"""
+
+from . import hypothesis_compat  # noqa: F401
+
+__all__ = ["hypothesis_compat"]

@@ -1,0 +1,103 @@
+"""Optional-import shim for `hypothesis`.
+
+When hypothesis is installed, this module is a transparent re-export —
+property tests get the real shrinking/fuzzing engine.  When it is absent
+(this container does not ship it), a minimal deterministic fallback runs
+each property test on a fixed pseudo-random sample of examples: much weaker
+than hypothesis, but the invariants still get exercised and `pytest -x -q`
+collects and passes with no extra dependency.
+
+Usage in tests (drop-in for the hypothesis import line)::
+
+    from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+Fallback support is intentionally tiny: `st.integers`, `st.floats`,
+`st.booleans`, `st.sampled_from`, keyword-style `@given`, and
+`@settings(max_examples=..., deadline=...)` (deadline ignored).  Anything
+else raises immediately so a test can't silently run with wrong semantics.
+"""
+from __future__ import annotations
+
+HAVE_HYPOTHESIS = True
+try:
+    from hypothesis import given, settings  # type: ignore # noqa: F401
+    from hypothesis import strategies  # type: ignore # noqa: F401
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    from types import SimpleNamespace
+
+    _FALLBACK_EXAMPLES = 10    # per test, when no @settings is given
+    _MAX_EXAMPLES_CAP = 25     # keep dependency-free CI runs bounded
+    _SEED = 0xC0F70
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return rng.random() < 0.5
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def example(self, rng):
+            return rng.choice(self.options)
+
+    strategies = SimpleNamespace(
+        integers=lambda min_value, max_value: _Integers(min_value, max_value),
+        floats=lambda min_value, max_value: _Floats(min_value, max_value),
+        booleans=lambda: _Booleans(),
+        sampled_from=lambda options: _SampledFrom(options),
+    )
+
+    def given(*args, **strats):
+        if args or not strats:
+            raise TypeError(
+                "hypothesis fallback supports keyword strategies only; "
+                "install hypothesis for the full API")
+        for name, s in strats.items():
+            if not isinstance(s, _Strategy):
+                raise TypeError(f"unsupported strategy for {name!r}; "
+                                "install hypothesis for the full API")
+
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    fn(**{k: s.example(rng) for k, s in strats.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = _FALLBACK_EXAMPLES
+            wrapper.hypothesis_fallback = True
+            return wrapper
+
+        return deco
+
+    def settings(max_examples: int | None = None, **_ignored):
+        def deco(fn):
+            if max_examples is not None and hasattr(fn, "_max_examples"):
+                fn._max_examples = min(int(max_examples), _MAX_EXAMPLES_CAP)
+            return fn
+
+        return deco

@@ -4,7 +4,7 @@ and the analytical artifacts (gap instance, FSP reduction, Algorithm 5
 duals, grouping) match the paper exactly."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Coflow, Instance, Job, dma, dma_rt, dma_srt,
                         fsp_to_coflow_job, gap_bounds, gap_instance,

@@ -3,7 +3,7 @@ size), matching validity, demand conservation — on adversarial and random
 demand matrices."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bna, effective_size
 from repro.core.bna import schedule_total_time, verify_bna_schedule

@@ -3,7 +3,7 @@ tolerance story depends on."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core import Coflow, Instance, Job, dma, gdm, om_alg

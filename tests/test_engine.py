@@ -1,0 +1,187 @@
+"""Engine layer: registry/parity with the legacy call paths, backend
+dispatch (pallas vs numpy alphas), and the incremental online path."""
+import numpy as np
+import pytest
+
+from repro.core import (available_schedulers, backfill, cache_stats,
+                        clear_caches, compute_alphas, gdm, make_scheduler,
+                        om_alg, paper_workload, plan, plan_online,
+                        poisson_releases, simulate_online, theta0,
+                        use_alpha_backend)
+from repro.core import backend as backend_mod
+from repro.core.timeline import EdgeIntervals, _alphas_vectorized
+
+
+def _rand_edges(seed, m=6, e=40, horizon=60):
+    rng = np.random.default_rng(seed)
+    t0 = rng.integers(0, horizon, e)
+    t1 = t0 + rng.integers(1, 30, e)
+    edges = EdgeIntervals(t0.astype(np.int64), t1.astype(np.int64),
+                          rng.integers(0, m, e).astype(np.int64),
+                          rng.integers(0, m, e).astype(np.int64))
+    events = np.unique(np.concatenate([t0, t1]))
+    return events, edges
+
+
+# --- registry + offline parity ---------------------------------------------
+
+def test_registry_covers_all_paper_algorithms():
+    names = set(available_schedulers())
+    assert {"gdm", "gdm_rt", "om_alg",
+            "gdm_bf", "gdm_rt_bf", "om_alg_bf"} <= names
+
+
+def test_unknown_scheduler_raises():
+    with pytest.raises(KeyError):
+        make_scheduler("nope")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_matches_legacy_gdm(seed):
+    inst = paper_workload(m=10, mu_bar=3, seed=seed, scale=0.06)
+    legacy = gdm(inst, beta=2.0, rng=np.random.default_rng(seed))
+    p = plan(inst, "gdm", beta=2.0, seed=seed)
+    assert p.twct() == pytest.approx(legacy.twct(), abs=1e-9)
+    assert p.job_completions() == legacy.job_completions()
+    # backfilled variant == backfill of the legacy schedule
+    pb = plan(inst, "gdm_bf", beta=2.0, seed=seed)
+    assert pb.twct() == pytest.approx(backfill(legacy).twct(), abs=1e-9)
+
+
+def test_engine_matches_legacy_gdm_rt_flat():
+    inst = paper_workload(m=10, mu_bar=4, seed=2, scale=0.06, rooted=True)
+    legacy = gdm(inst, beta=2.0, rng=np.random.default_rng(2), rooted=True,
+                 nested=False)
+    p = plan(inst, "gdm_rt", beta=2.0, seed=2, nested=False)
+    assert p.twct() == pytest.approx(legacy.twct(), abs=1e-9)
+    assert p.job_completions() == legacy.job_completions()
+
+
+def test_engine_matches_legacy_om_alg():
+    inst = paper_workload(m=10, mu_bar=3, seed=3, scale=0.06)
+    legacy = om_alg(inst)
+    p = plan(inst, "om_alg")
+    assert p.twct() == pytest.approx(legacy.twct(), abs=1e-9)
+    assert p.job_completions() == legacy.job_completions()
+    pb = plan(inst, "om_alg_bf")
+    assert pb.twct() == pytest.approx(backfill(legacy).twct(), abs=1e-9)
+
+
+def test_plan_backfilled_shortcut():
+    inst = paper_workload(m=8, mu_bar=3, seed=0, scale=0.05)
+    p = plan(inst, "gdm", seed=0)
+    assert p.backfilled().twct() == pytest.approx(
+        plan(inst, "gdm_bf", seed=0).twct(), abs=1e-9)
+
+
+def test_transcript_roundtrip_completions():
+    inst = paper_workload(m=8, mu_bar=3, seed=1, scale=0.05)
+    p = plan(inst, "gdm", seed=1)
+    tj = p.transcript().job_completions()
+    pj = p.job_completions()
+    for jid, t in pj.items():
+        assert tj[jid] == pytest.approx(t, abs=1e-6)
+
+
+# --- backend dispatch -------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_pallas_alphas_match_numpy_oracle(seed):
+    m = 5 + seed
+    events, edges = _rand_edges(seed, m=m, e=30 + 10 * seed)
+    a_np = compute_alphas(events, edges, m, force="numpy")
+    a_pl = compute_alphas(events, edges, m, force="pallas")
+    assert np.array_equal(a_np, a_pl)
+    assert np.array_equal(a_np, _alphas_vectorized(events, edges, m))
+
+
+def test_backend_switch_is_results_identical_end_to_end():
+    inst = paper_workload(m=8, mu_bar=3, seed=0, scale=0.05)
+    ref = gdm(inst, rng=np.random.default_rng(0))
+    with use_alpha_backend("pallas"):
+        via_kernel = gdm(inst, rng=np.random.default_rng(0))
+    assert via_kernel.twct() == pytest.approx(ref.twct(), abs=1e-9)
+    for p_ref, p_k in zip(ref.parts, via_kernel.parts):
+        assert np.array_equal(p_ref.alphas, p_k.alphas)
+
+
+def test_backend_config_rejects_unknown():
+    with pytest.raises(ValueError):
+        backend_mod.set_alpha_backend("cuda")
+
+
+# --- caches -----------------------------------------------------------------
+
+def test_bna_cache_bytes_keyed_and_bounded():
+    clear_caches()
+    d = np.zeros((4, 4), dtype=np.int64)
+    d[0, 1] = 3
+    p1 = backend_mod.bna_pieces(d)
+    p2 = backend_mod.bna_pieces(d.copy())   # fresh object, same bytes
+    assert p1 is p2
+    st = cache_stats()["bna"]
+    assert st["hits"] == 1 and st["misses"] == 1
+    # bounded: distinct demands never exceed maxsize
+    old = backend_mod.config.bna_cache_size
+    try:
+        backend_mod.config.bna_cache_size = 4
+        clear_caches()
+        for v in range(10):
+            dv = np.zeros((4, 4), dtype=np.int64)
+            dv[1, 2] = v + 1
+            backend_mod.bna_pieces(dv)
+        assert len(backend_mod.bna_cache) <= 4
+    finally:
+        backend_mod.config.bna_cache_size = old
+        clear_caches()
+
+
+def test_order_cache_hits_on_replanning_same_state():
+    clear_caches()
+    inst = paper_workload(m=8, mu_bar=3, seed=4, scale=0.05)
+    g = gdm(inst, rng=np.random.default_rng(0))
+    o = om_alg(inst)   # same state -> Algorithm 5 order reused
+    assert cache_stats()["order"]["hits"] >= 1
+    assert g.meta["order"] == o.meta["order"]
+
+
+# --- incremental online path ------------------------------------------------
+
+def test_online_incremental_matches_full_recompute_and_hits():
+    base = paper_workload(m=8, mu_bar=3, seed=1, scale=0.05)
+    inst = poisson_releases(base, theta=theta0(base) * 5, seed=1)
+    legacy = simulate_online(
+        inst, lambda sub: gdm(sub, rng=np.random.default_rng(0)).transcript())
+    clear_caches()
+    inc = plan_online(inst, "gdm", seed=0)
+    cold = plan_online(inst, "gdm", incremental=False, seed=0)
+    assert inc.twct() == pytest.approx(legacy.twct(), abs=1e-9)
+    assert cold.twct() == pytest.approx(legacy.twct(), abs=1e-9)
+    assert inc.job_completions == legacy.job_completions
+    # the bytes-keyed cache must hit across reschedules even from cold
+    assert inc.stats["bna"]["hits"] > 0
+    assert cold.stats["bna"]["hits"] == 0
+    assert inc.reschedules == legacy.reschedules
+
+
+def test_online_accepts_scheduler_names_and_objects():
+    base = paper_workload(m=8, mu_bar=3, seed=3, scale=0.04)
+    by_name = simulate_online(base, "om_alg")
+    by_obj = simulate_online(base, make_scheduler("om_alg"))
+    by_closure = simulate_online(base, lambda sub: om_alg(sub).transcript())
+    assert by_name.twct() == pytest.approx(by_closure.twct(), abs=1e-9)
+    assert by_obj.twct() == pytest.approx(by_closure.twct(), abs=1e-9)
+
+
+@pytest.mark.slow
+def test_online_acceptance_scale_hit_rate_and_wallclock():
+    """Acceptance: paper_workload(scale=0.12), Poisson releases — BNA hit
+    rate > 0, wall-clock no worse than from-scratch, identical twct."""
+    base = paper_workload(m=30, mu_bar=5, seed=0, scale=0.12)
+    inst = poisson_releases(base, theta=theta0(base) * 2, seed=0)
+    clear_caches()
+    inc = plan_online(inst, "gdm", seed=0)
+    cold = plan_online(inst, "gdm", incremental=False, seed=0)
+    assert inc.twct() == pytest.approx(cold.twct(), abs=1e-9)
+    assert inc.stats["bna"]["hit_rate"] > 0
+    assert inc.stats["wall_s"] <= cold.stats["wall_s"] * 1.10

@@ -1,7 +1,7 @@
 """Timeline machinery, backfilling, and the online driver."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (backfill, gdm, om_alg, paper_workload,
                         poisson_releases, simulate_online, theta0, twct)
