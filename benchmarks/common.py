@@ -14,6 +14,23 @@ from pathlib import Path
 RESULTS = Path(__file__).resolve().parent / "results"
 RESULTS.mkdir(exist_ok=True)
 
+# Scenario-matrix size profiles: profile -> (m override or None for the
+# scenario's default port count, scale).  Used by scenario_matrix.py and the
+# --scenario flag on benchmarks.run.
+SCENARIO_PROFILES = {
+    "fast": (12, 0.08),
+    "standard": (24, 0.2),
+    "paper": (None, 1.0),
+}
+
+
+def build_scenario(name: str, profile: str = "fast", seed: int = 0):
+    """Build a registered scenario at a benchmark size profile."""
+    from repro import scenarios
+
+    m, scale = SCENARIO_PROFILES[profile]
+    return scenarios.build(name, m=m, scale=scale, seed=seed)
+
 _rows: list[tuple[str, float, str]] = []
 
 

@@ -26,7 +26,12 @@ def main() -> None:
     ap.add_argument("--paper", action="store_true",
                     help="published workload scale (longest)")
     ap.add_argument("--only", default=None,
-                    help="comma list: figs,online,beta,rsd,planner,kernels,roofline")
+                    help="comma list: figs,online,beta,rsd,planner,kernels,"
+                         "roofline,scenarios")
+    ap.add_argument("--scenario", default=None,
+                    help="comma list of scenario-registry keys for the "
+                         "scenario x scheduler matrix (default: all "
+                         "registered; implies the 'scenarios' section)")
     ap.add_argument("--alpha-backend", default=None,
                     choices=("auto", "numpy", "pallas"),
                     help="route merge_and_fix alphas through this backend "
@@ -47,9 +52,13 @@ def main() -> None:
         scale, seeds, ms, mus, factors = 0.35, 2, (10, 30, 50, 100, 150), \
             (2, 5, 10), (2, 10, 100)
 
-    want = set((args.only or "figs,online,beta,rsd,planner,kernels,roofline")
+    want = set((args.only or
+                "figs,online,beta,rsd,planner,kernels,roofline,scenarios")
                .split(","))
-    from . import common, kernels_bench, paper_figs, planner_ab, roofline_report
+    if args.scenario:
+        want.add("scenarios")
+    from . import (common, kernels_bench, paper_figs, planner_ab,
+                   roofline_report, scenario_matrix)
 
     if "figs" in want:
         paper_figs.workload_calibration(scale)
@@ -68,6 +77,12 @@ def main() -> None:
                              ms=(30, 150) if not args.fast else (30,))
     if "rsd" in want:
         paper_figs.rsd(scale=min(scale, 0.15), m=50)
+    if "scenarios" in want:
+        profile = "paper" if args.paper else ("standard" if args.standard
+                                              else "fast")
+        scenario_matrix.run(
+            args.scenario.split(",") if args.scenario else None,
+            profile=profile)
     if "planner" in want:
         planner_ab.run()
     if "kernels" in want:

@@ -1,18 +1,24 @@
-"""Quickstart: schedule a multi-stage coflow workload with the paper's
-G-DM algorithm and compare against the prior-art O(m)Alg baseline, all
-through the unified scheduler engine (repro.core.engine).
+"""Quickstart: build a workload from the scenario registry, schedule it
+with the paper's G-DM algorithm, and compare against the prior-art O(m)Alg
+baseline — all through the unified scheduler + scenario registries.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (available_schedulers, paper_workload, plan,
-                        verify_schedule, workload_stats)
+from repro import scenarios
+from repro.core import (available_schedulers, plan, verify_schedule,
+                        workload_stats)
 
 
 def main() -> None:
     # a Facebook-trace-calibrated workload: ~5 coflows per job, rooted-tree
     # dependencies (Hive/MapReduce-style stages). Gains grow with port count
-    # and job count (paper Fig 6a) — benchmarks/run.py sweeps the full range.
-    inst = paper_workload(m=24, mu_bar=5, seed=3, scale=0.08, rooted=True)
+    # and job count (paper Fig 6a) — benchmarks/run.py sweeps the full range,
+    # and `--scenario` runs the whole zoo (incast, shuffle-heavy, ...).
+    built = scenarios.build("fb_like_rt", m=24, seed=3, scale=0.08)
+    inst = built.instance
+    print("registered scenarios:", ", ".join(scenarios.names()))
+    print("scenario:", built.meta.name, "| DAG family:", built.meta.dag_family,
+          "| arrivals:", built.meta.arrival)
     print("workload:", workload_stats(inst))
     print("registered schedulers:", ", ".join(available_schedulers()))
 

@@ -19,10 +19,12 @@ from .gdm import gdm, group_jobs
 from .online import OnlineResult, simulate_online
 from .ordering import OrderResult, cached_job_order, job_order
 from .result import CompositeSchedule, Transcript, twct
-from .simulator import verify_schedule
+from .simulator import verify_schedule, verify_transcript
 from .timeline import FinalSchedule, UnitSchedule, merge_and_fix
-from .traces import (PAPER_STATS, build_jobs, fb_like_coflows, paper_workload,
-                     poisson_releases, theta0, workload_stats)
+from .traces import (PAPER_STATS, build_jobs, dag_edges, fb_like_coflows,
+                     paper_workload, poisson_releases, port_skew,
+                     sample_coflows, sample_sizes, sample_width, theta0,
+                     workload_stats)
 from .types import (Coflow, Instance, Job, aggregate_size, coflow_layers,
                     critical_path_size, effective_size, is_rooted_tree,
                     topological_order)

@@ -41,7 +41,19 @@ class BackfillResult:
         return twct(self.job_completions, self.instance, from_release)
 
 
-def backfill(sched: CompositeSchedule) -> BackfillResult:
+def backfill(sched: CompositeSchedule, fill: bool = True) -> BackfillResult:
+    """Re-execute `sched`'s ledger under exact port capacity, offering
+    leftover capacity to eligible flows (fill=True).
+
+    fill=False is the *null-backfill* comparator: the identical
+    capacity-exact sweep with step 2 (filling) disabled.  Because the ledger
+    is a uniform-rate approximation of the packet-level plan, capacity
+    capping can defer work past its planned window, so the re-executed
+    completion times are not pointwise comparable to the plan's ledger
+    window-ends (deep chains at larger m exhibit this).  The invariant that
+    IS guaranteed — and that the scenario x scheduler matrix asserts — is
+    monotonicity in `fill`: filling only ever adds served units, so
+    twct(fill=True) <= twct(fill=False)."""
     inst = sched.instance
     m = inst.m
     by_id = {j.jid: j for j in inst.jobs}
@@ -65,7 +77,7 @@ def backfill(sched: CompositeSchedule) -> BackfillResult:
             comp[key] = f.e1  # zero-demand marker
     order_by_planned_end = sorted(plan.values(), key=lambda f: (f.e1, f.jid, f.cid))
 
-    def process(a: float, b: float) -> None:
+    def process(a: float, b: float, fill_now: bool = True) -> None:
         L = b - a
         slack_s = np.full(m, L, dtype=np.float64)
         slack_r = np.full(m, L, dtype=np.float64)
@@ -96,6 +108,8 @@ def backfill(sched: CompositeSchedule) -> BackfillResult:
             if f.rem_total <= 1e-9:
                 comp[(f.jid, f.cid)] = b
         # 2) backfill into leftover capacity
+        if not fill_now:
+            return
         if slack_s.max(initial=0) <= 1e-9 and slack_r.max(initial=0) <= 1e-9:
             return
         for f in order_by_planned_end:
@@ -116,12 +130,14 @@ def backfill(sched: CompositeSchedule) -> BackfillResult:
 
     for a, b in zip(events[:-1], events[1:]):
         if b > a:
-            process(a, b)
+            process(a, b, fill_now=fill)
 
     # drain: capacity-capped planned units can spill past the last planned
     # window; keep offering full capacity until everything is transmitted
     # (progress is guaranteed: a topologically-first unfinished coflow of a
-    # released job is always eligible).
+    # released job is always eligible).  The drain always fills — with no
+    # planned windows left, filling is the only way leftovers move, so the
+    # fill=False comparator differs only during the planned timeline.
     t = events[-1] if events else 0.0
     drain_len = max((f.rem_total for f in plan.values()), default=0.0)
     guard = 0

@@ -22,7 +22,7 @@ import numpy as np
 from .dma import cached_bna, draw_delays
 from .timeline import FinalSchedule, UnitSchedule, merge_and_fix, unit_from_coflow_plan
 from .types import (Job, aggregate_size, children_of, coflow_layers,
-                    is_rooted_tree, parents_of)
+                    is_rooted_forest, parents_of)
 
 __all__ = ["path_subjobs", "srt_start_times", "dma_srt", "dma_rt"]
 
@@ -61,11 +61,30 @@ def srt_start_times(
     If no path candidate clears the precedence bound (possible only for
     fan-out orientations / non-tree inputs), falls back to starting right
     after the parents finish — precedence always holds; only the analysis
-    constant is affected (documented in DESIGN.md)."""
-    if require_tree and not is_rooted_tree(job):
-        raise ValueError(f"job {job.jid} is not a rooted tree")
+    constant is affected (documented in DESIGN.md).
+
+    Accepted shapes are rooted *forests* (disjoint unions of fan-in or of
+    fan-out trees) — strictly wider than the paper's Definition 5 trees,
+    because online rescheduling hands DMA-SRT the residual of a tree after
+    completed coflows are removed, and that residual loses connectivity but
+    never the degree bound.  Path enumeration stays linear on forests.
+
+    General DAGs with require_tree=False skip path enumeration entirely
+    (a dense DAG can have exponentially many maximal paths) and use the
+    start-after-parents fallback for every coflow — this is what lets the
+    scenario x scheduler cross-product run G-DM-RT on general-DAG
+    workloads."""
     n = job.mu
     sizes = [c.D for c in job.coflows]
+    if not is_rooted_forest(job):
+        if require_tree:
+            raise ValueError(f"job {job.jid} is not a rooted tree or forest")
+        par = parents_of(n, job.edges)
+        t: list[int] = [0] * n
+        for layer in coflow_layers(job):
+            for c in layer:
+                t[c] = max((t[q] + sizes[q] for q in par[c]), default=0)
+        return t
     paths = path_subjobs(job)
     delta_j = job.delta
     hi = int(delta_j // beta)

@@ -197,9 +197,10 @@ def _gdm(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
 @register_scheduler("gdm_rt", "G-DM-RT (Algorithm 4 over rooted trees, "
                               "DMA-RT groups; nested=False = flat fast path)")
 def _gdm_rt(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
-            nested: bool = True, decompose: bool = False) -> CompositeSchedule:
+            nested: bool = True, decompose: bool = False,
+            require_tree: bool = True) -> CompositeSchedule:
     return gdm(instance, beta=beta, rng=_rng(rng, seed), rooted=True,
-               decompose=decompose, nested=nested)
+               decompose=decompose, nested=nested, require_tree=require_tree)
 
 
 @register_scheduler("om_alg", "O(m)Alg baseline: one-at-a-time jobs in "

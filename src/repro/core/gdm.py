@@ -67,8 +67,13 @@ def gdm(
     decompose: bool = False,
     use_kernel: bool | None = None,
     nested: bool = True,
+    require_tree: bool = True,
 ) -> CompositeSchedule:
-    """G-DM (rooted=False) / G-DM-RT (rooted=True)."""
+    """G-DM (rooted=False) / G-DM-RT (rooted=True).
+
+    require_tree=False lets G-DM-RT accept non-tree jobs: DMA-SRT's start
+    times fall back to start-after-parents for those jobs (precedence-exact;
+    only the rooted-tree analysis constant is lost)."""
     if rng is None:
         rng = np.random.default_rng(0)
     by_id = {j.jid: j for j in instance.jobs}
@@ -82,7 +87,8 @@ def gdm(
         if rooted:
             sub = dma_rt(jobs, instance.m, beta=beta, rng=rng,
                          origin=int(start), decompose=decompose,
-                         use_kernel=use_kernel, nested=nested)
+                         use_kernel=use_kernel, nested=nested,
+                         require_tree=require_tree)
         else:
             sub = dma(jobs, instance.m, beta=beta, rng=rng,
                       origin=int(start), decompose=decompose,

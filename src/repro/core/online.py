@@ -135,7 +135,18 @@ def _execute(
     remaining: dict[tuple[int, int], np.ndarray],
     done: dict[tuple[int, int], float],
 ) -> None:
-    """Apply transcript (local time) up to `horizon`; floor partial windows."""
+    """Apply transcript (local time) up to `horizon`; floor partial windows.
+
+    Flooring is *cumulative* per coflow edge, not per entry: backfilled
+    transcripts split a flow's units fractionally across many windows, and
+    flooring each window independently can yield zero progress forever
+    (0.5 + 0.5 -> 0 + 0), livelocking the reschedule loop.  Accumulating
+    the fractional units and banking integer packets whenever the running
+    total crosses an integer keeps partial windows conservative while
+    guaranteeing progress (the 1e-6 slack absorbs the backfill sweep's
+    conservation tolerance)."""
+    acc: dict[tuple[int, int], np.ndarray] = {}
+    banked: dict[tuple[int, int], np.ndarray] = {}
     for e in sorted(transcript.entries, key=lambda e: e.t1):
         if e.units.size == 0:
             if e.t1 <= horizon + 1e-9:
@@ -153,7 +164,13 @@ def _execute(
             end = horizon
         key = (e.jid, cid_maps[e.jid][e.cid])
         rem = remaining[key]
-        take = np.minimum(amount, rem[e.srcs, e.dsts]).astype(np.int64)
+        a = acc.setdefault(key, np.zeros_like(rem, dtype=np.float64))
+        t = banked.setdefault(key, np.zeros_like(rem))
+        a[e.srcs, e.dsts] += amount
+        avail = np.floor(a[e.srcs, e.dsts] + 1e-6).astype(np.int64) \
+            - t[e.srcs, e.dsts]
+        take = np.minimum(np.maximum(avail, 0), rem[e.srcs, e.dsts])
+        t[e.srcs, e.dsts] += take
         rem[e.srcs, e.dsts] -= take
         if rem.sum() == 0 and key not in done:
             done[key] = t0_abs + end

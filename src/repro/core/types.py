@@ -27,6 +27,7 @@ __all__ = [
     "coflow_layers",
     "critical_path_size",
     "is_rooted_tree",
+    "is_rooted_forest",
     "validate_dag",
 ]
 
@@ -230,6 +231,28 @@ def critical_path_size(job: Job) -> int:
     for u in order:
         best[u] = sizes[u] + max((best[p] for p in par[u]), default=0)
     return max(best)
+
+
+def is_rooted_forest(job: Job) -> bool:
+    """True iff the DAG is a disjoint union of fan-in trees (every out-degree
+    <= 1) or of fan-out trees (every in-degree <= 1).
+
+    Strictly wider than `is_rooted_tree` (connectivity and the single-root
+    requirement are dropped).  This is the class DMA-SRT's path machinery is
+    actually safe on: maximal paths are one-per-source (fan-in) or
+    one-per-sink (fan-out), so enumeration cannot blow up.  It matters
+    online: removing completed coflows from a rooted tree preserves the
+    degree bound but not connectivity, so residual sub-jobs at a
+    rescheduling point are forests."""
+    n = job.mu
+    if n == 0:
+        return False
+    outdeg = [0] * n
+    indeg = [0] * n
+    for a, b in job.edges:
+        outdeg[a] += 1
+        indeg[b] += 1
+    return all(d <= 1 for d in outdeg) or all(d <= 1 for d in indeg)
 
 
 def is_rooted_tree(job: Job) -> bool:

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core.types import Coflow, Instance, Job
 
 __all__ = ["CollectiveOp", "extract_collectives", "coflows_from_step",
-           "plan", "PlanOutcome", "bucket_order_from_plan"]
+           "synthetic_collective_ops", "plan", "PlanOutcome",
+           "bucket_order_from_plan"]
 
 _BYTES_PER_UNIT = float(2 ** 20)   # one demand unit == 1 MiB on the fabric
 
@@ -75,6 +76,27 @@ def extract_collectives(hlo_text: str) -> list[CollectiveOp]:
             consecutive = all(b - a == 1 for a, b in zip(ids, ids[1:]))
             axis = "model" if consecutive or len(ids) < 2 else "data"
         ops.append(CollectiveOp(kind, nbytes, len(ops), axis))
+    return ops
+
+
+def synthetic_collective_ops(
+    n_ops: int = 12,
+    seed: int = 0,
+    max_mb: int = 8,
+    kinds: tuple[str, ...] = ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all"),
+) -> list[CollectiveOp]:
+    """A seeded synthetic collective program (no HLO needed): `n_ops` ops in
+    program order with payloads in [1, max_mb] MiB and random mesh axes.
+    Feeds `coflows_from_step` when no compiled step is at hand — the
+    `dist_collectives` scenario in `repro.scenarios` is built on this."""
+    rng = np.random.default_rng(seed)
+    ops: list[CollectiveOp] = []
+    for i in range(max(1, n_ops)):
+        kind = kinds[int(rng.integers(0, len(kinds)))]
+        mb = int(rng.integers(1, max(1, max_mb) + 1))
+        axis = "model" if rng.random() < 0.5 else "data"
+        ops.append(CollectiveOp(kind, mb * _BYTES_PER_UNIT, i, axis))
     return ops
 
 

@@ -1,0 +1,266 @@
+"""Scenario registry + workload zoo: the scenario x scheduler cross-product
+invariant harness.
+
+Every registered scenario is run against every registered scheduler and held
+to the repo's core invariants:
+
+  * precedence-feasibility  — transcripts respect Starts-After edges,
+    releases, and demand conservation;
+  * capacity-feasibility    — packet-level (decompose=True) for the plain
+    schedulers; exact transcript-level for the backfilled ones;
+  * simulator-replay        — the scheduler's reported completion times
+    match an independent replay of its transcript;
+  * backfill-no-worse       — filling leftover capacity never increases
+    TWCT relative to the same capacity-exact executor without filling
+    (the null-backfill comparator; see backfill.py for why the plan's
+    optimistic ledger window-ends are not the right comparator);
+  * fixed-seed determinism  — generators and schedulers are bit-stable
+    under a fixed seed;
+  * online == offline       — the §VII-C.2 online protocol reproduces the
+    offline schedule when every release is 0.
+
+Plus: metadata-bound property tests (via the hypothesis shim), golden TWCT
+regressions per scheduler (refresh with REPRO_UPDATE_GOLDENS=1), and the
+seed-determinism satellite for the trace primitives.
+"""
+import functools
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import (available_schedulers, backfill, build_jobs,
+                        fb_like_coflows, make_scheduler, paper_workload, plan,
+                        poisson_releases, simulate_online, theta0, twct,
+                        verify_schedule, verify_transcript)
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+SCHEDULERS = sorted(available_schedulers())
+GOLDEN_PATH = Path(__file__).parent / "goldens" / "scenario_goldens.json"
+
+# tiny per-scenario sizes: the full 9 x 6 matrix must stay CI-cheap
+TINY = {
+    "fb_like": dict(m=6, scale=0.03),
+    "fb_like_rt": dict(m=6, scale=0.03),
+    "alibaba_sparse": dict(m=6, scale=0.15),
+    "incast": dict(m=6, scale=0.1),
+    "shuffle_heavy": dict(m=6, scale=0.2),
+    "wide_shallow": dict(m=6, scale=0.2),
+    "deep_chain": dict(m=6, scale=0.25),
+    "online_poisson": dict(m=6, scale=0.03),
+    "dist_collectives": dict(m=8, scale=0.5),
+}
+# mid sizes for the slow full matrix
+MID = {
+    "fb_like": dict(m=14, scale=0.06),
+    "fb_like_rt": dict(m=14, scale=0.06),
+    "alibaba_sparse": dict(m=14, scale=0.3),
+    "incast": dict(m=14, scale=0.25),
+    "shuffle_heavy": dict(m=12, scale=0.35),
+    "wide_shallow": dict(m=14, scale=0.3),
+    "deep_chain": dict(m=12, scale=0.4),
+    "online_poisson": dict(m=14, scale=0.06),
+    "dist_collectives": dict(m=12, scale=1.0),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def tiny(name: str) -> scenarios.BuiltScenario:
+    return scenarios.build(name, seed=0, **TINY[name])
+
+
+def _opts(name: str, sched: str) -> dict:
+    return scenarios.scheduler_opts(sched, tiny(name).meta)
+
+
+@functools.lru_cache(maxsize=None)
+def tiny_plan(name: str, sched: str, decompose: bool = False):
+    opts = _opts(name, sched)
+    if decompose:
+        opts["decompose"] = True
+    return plan(tiny(name).instance, sched, seed=0, **opts)
+
+
+def _instances_equal(a, b) -> bool:
+    if a.m != b.m or a.n != b.n:
+        return False
+    for ja, jb in zip(a.jobs, b.jobs):
+        if (ja.jid, ja.edges, ja.weight, ja.release) != \
+                (jb.jid, jb.edges, jb.weight, jb.release):
+            return False
+        if ja.mu != jb.mu:
+            return False
+        for ca, cb in zip(ja.coflows, jb.coflows):
+            if ca.cid != cb.cid or not np.array_equal(ca.demand, cb.demand):
+                return False
+    return True
+
+
+def _assert_invariants(built: scenarios.BuiltScenario, sched: str,
+                       seed: int = 0) -> None:
+    """The per-pair invariant bundle (shared by the tiny matrix and the
+    slow mid-size matrix)."""
+    inst = built.instance
+    opts = scenarios.scheduler_opts(sched, built.meta)
+    p = plan(inst, sched, seed=seed, **opts)
+
+    # fixed-seed determinism (scheduler)
+    q = plan(inst, sched, seed=seed, **opts)
+    assert p.twct() == q.twct()
+    assert p.job_completions() == q.job_completions()
+
+    # simulator-replay agreement
+    replay = p.transcript().job_completions()
+    for jid, t in p.job_completions().items():
+        assert replay[jid] == pytest.approx(t, abs=1e-6), \
+            f"{sched}: job {jid} reported {t} but transcript replays {replay[jid]}"
+
+    # precedence/conservation/release at the transcript level; backfilled
+    # transcripts are additionally exactly capacity-feasible there
+    verify_transcript(inst, p.transcript(),
+                      check_capacity=sched.endswith("_bf"))
+
+    if not sched.endswith("_bf"):
+        # packet-level capacity-feasibility (matchings, time-disjoint)
+        pd = plan(inst, sched, seed=seed, decompose=True, **opts)
+        verify_schedule(inst, pd.schedule)
+        # backfill-no-worse vs the null-backfill comparator
+        filled = plan(inst, sched + "_bf", seed=seed, **opts).twct()
+        null = backfill(p.schedule, fill=False).twct()
+        assert filled <= null * (1 + 1e-9) + 1e-9, \
+            f"{sched}_bf twct {filled} > null-backfill {null}"
+
+    # online == offline when all releases are 0
+    inst0 = scenarios.strip_releases(inst)
+    onl = simulate_online(inst0, make_scheduler(sched, seed=seed, **opts))
+    off = p if built.meta.arrival == "offline" else \
+        plan(inst0, sched, seed=seed, **opts)
+    offline_twct = twct(off.transcript().job_completions(), inst0)
+    assert onl.twct() == pytest.approx(offline_twct, abs=1e-6), \
+        f"{sched}: online {onl.twct()} != offline {offline_twct}"
+
+
+# --- registry API (mirrors the scheduler registry) ---------------------------
+
+def test_registry_lists_required_scenarios():
+    names = scenarios.names()
+    assert len(names) >= 7
+    assert {"fb_like", "alibaba_sparse", "incast", "shuffle_heavy",
+            "wide_shallow", "deep_chain", "online_poisson"} <= set(names)
+    assert set(scenarios.available()) == set(names)
+    assert all(scenarios.available().values()), "scenario without a doc line"
+
+
+def test_registry_get_and_unknown():
+    s = scenarios.get("incast")
+    assert s.name == "incast" and callable(s.builder)
+    with pytest.raises(KeyError):
+        scenarios.get("nope")
+
+
+def test_registry_rejects_duplicates():
+    with pytest.raises(ValueError):
+        scenarios.register("fb_like")(lambda **kw: None)
+
+
+def test_dist_collectives_honors_requested_port_count():
+    assert scenarios.build("dist_collectives", m=8).instance.m == 8
+    with pytest.raises(ValueError):
+        scenarios.build("dist_collectives", m=9)
+
+
+def test_verify_transcript_handles_zero_demand_child():
+    """A zero-demand coflow with an incoming Starts-After edge only carries
+    an instantaneous marker entry in the transcript; precedence checking
+    must not choke on it."""
+    from repro.core import Coflow, Instance, Job
+
+    d = np.zeros((4, 4), dtype=np.int64)
+    d[0, 1] = 5
+    job = Job(0, [Coflow(0, 0, d),
+                  Coflow(0, 1, np.zeros((4, 4), dtype=np.int64))], [(0, 1)])
+    inst = Instance(4, [job])
+    for sched in ("gdm", "gdm_rt", "om_alg"):
+        verify_transcript(inst, plan(inst, sched, seed=0).transcript())
+
+
+def test_fb_like_scenario_matches_legacy_paper_workload():
+    built = scenarios.build("fb_like", m=10, seed=2, scale=0.05)
+    legacy = paper_workload(m=10, mu_bar=5, seed=2, scale=0.05)
+    assert _instances_equal(built.instance, legacy), \
+        "generalized build_jobs changed the legacy fb_like RNG stream"
+
+
+# --- the cross-product matrix ------------------------------------------------
+
+@pytest.mark.parametrize("sched", SCHEDULERS)
+@pytest.mark.parametrize("scen", scenarios.names())
+def test_matrix_invariants(scen, sched):
+    _assert_invariants(tiny(scen), sched)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scen", scenarios.names())
+def test_matrix_invariants_mid_scale(scen):
+    built = scenarios.build(scen, seed=1, **MID[scen])
+    scenarios.check_bounds(built)
+    for sched in SCHEDULERS:
+        _assert_invariants(built, sched, seed=1)
+
+
+# --- metadata bounds (property tests via the hypothesis shim) ---------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_generated_instances_satisfy_declared_bounds(seed):
+    for name in scenarios.names():
+        built = scenarios.build(name, seed=seed, **TINY[name])
+        scenarios.check_bounds(built)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_scenario_generators_deterministic(seed):
+    for name in scenarios.names():
+        a = scenarios.build(name, seed=seed, **TINY[name])
+        b = scenarios.build(name, seed=seed, **TINY[name])
+        assert _instances_equal(a.instance, b.instance), \
+            f"{name} is not seed-deterministic"
+
+
+# --- seed determinism of the trace primitives (satellite) -------------------
+
+def test_trace_primitives_seed_deterministic():
+    d1 = fb_like_coflows(m=8, n_coflows=6, seed=7, scale=0.1)
+    d2 = fb_like_coflows(m=8, n_coflows=6, seed=7, scale=0.1)
+    assert len(d1) == len(d2)
+    assert all(np.array_equal(a, b) for a, b in zip(d1, d2))
+
+    i1 = build_jobs(d1, mu_bar=3, seed=7, weights="random")
+    i2 = build_jobs(d2, mu_bar=3, seed=7, weights="random")
+    assert _instances_equal(i1, i2)
+
+    p1 = poisson_releases(i1, theta=theta0(i1) * 3, seed=7)
+    p2 = poisson_releases(i2, theta=theta0(i2) * 3, seed=7)
+    assert _instances_equal(p1, p2)
+
+
+# --- golden TWCT regressions ------------------------------------------------
+
+def test_golden_twct_per_scheduler():
+    """Checked-in goldens: total weighted completion time of every
+    registered scheduler on the small fixed-seed fb_like scenario.  A
+    refactor that silently changes any schedule fails here; refresh
+    intentionally with REPRO_UPDATE_GOLDENS=1."""
+    got = {sched: tiny_plan("fb_like", sched).twct() for sched in SCHEDULERS}
+    if os.environ.get("REPRO_UPDATE_GOLDENS"):
+        GOLDEN_PATH.parent.mkdir(exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+    want = json.loads(GOLDEN_PATH.read_text())
+    assert set(want) == set(got), "scheduler registry changed; refresh goldens"
+    for sched, val in want.items():
+        assert got[sched] == pytest.approx(val, rel=1e-9), \
+            f"{sched}: twct {got[sched]} != golden {val}"

@@ -1,0 +1,112 @@
+"""DAG-shape statistics in `workload_stats` and the generalized trace
+primitives (width/size distributions, port-skew maps, DAG-family sampler)."""
+import numpy as np
+import pytest
+
+from repro.core import (Coflow, Instance, Job, dag_edges, port_skew,
+                        sample_coflows, sample_sizes, sample_width,
+                        workload_stats)
+
+
+def _job(jid, n, edges, m=4, fill=1):
+    d = np.full((m, m), fill, dtype=np.int64)
+    np.fill_diagonal(d, 0)
+    return Job(jid, [Coflow(jid, k, d.copy()) for k in range(n)], edges)
+
+
+def test_stats_chain_shape():
+    job = _job(0, 5, [(k, k + 1) for k in range(4)])
+    st = workload_stats(Instance(4, [job]))
+    assert st["dag_depth_max"] == 4
+    assert st["max_fan_in"] == 1 and st["max_fan_out"] == 1
+    assert st["tree_fraction"] == 1.0  # a chain is a (degenerate) rooted tree
+
+
+def test_stats_star_shape():
+    job = _job(0, 6, [(a, 5) for a in range(5)])  # wide-and-shallow fan-in
+    st = workload_stats(Instance(4, [job]))
+    assert st["dag_depth_max"] == 1
+    assert st["max_fan_in"] == 5 and st["max_fan_out"] == 1
+    assert st["tree_fraction"] == 1.0
+
+
+def test_stats_mixed_tree_fraction_and_depth():
+    tree = _job(0, 3, [(0, 2), (1, 2)])
+    diamond = _job(1, 4, [(0, 1), (0, 2), (1, 3), (2, 3)])  # not a tree
+    st = workload_stats(Instance(4, [tree, diamond]))
+    assert st["tree_fraction"] == pytest.approx(0.5)
+    assert st["dag_depth_max"] == 2
+    assert st["max_fan_out"] == 2  # diamond's source
+    assert st["dag_depth_mean"] == pytest.approx(1.5)
+
+
+def test_stats_edgeless_jobs():
+    st = workload_stats(Instance(4, [_job(0, 2, [])]))
+    assert st["dag_depth_max"] == 0
+    assert st["max_fan_in"] == 0 and st["max_fan_out"] == 0
+
+
+# --- generalized primitives --------------------------------------------------
+
+def test_sample_width_distributions():
+    rng = np.random.default_rng(0)
+    for dist, lo, hi in ((("fixed", 7), 7, 7),
+                         (("uniform", 2, 9), 2, 9),
+                         (("loguniform", 1, 50), 1, 50)):
+        for _ in range(50):
+            w = sample_width(rng, dist, cap=100)
+            assert lo <= w <= hi
+    assert sample_width(rng, ("fixed", 500), cap=12) == 12  # capped
+    with pytest.raises(ValueError):
+        sample_width(rng, ("zeta", 1), cap=10)
+
+
+def test_sample_sizes_clipped_and_integer():
+    rng = np.random.default_rng(1)
+    for dist in (("lognormal", 3.0, 1.6), ("uniform", 1, 9),
+                 ("pareto", 1.5, 2.0), ("fixed", 4)):
+        s = sample_sizes(rng, 200, dist, clip=(1, 9))
+        assert s.dtype == np.int64 and s.min() >= 1 and s.max() <= 9
+    with pytest.raises(ValueError):
+        sample_sizes(rng, 5, ("weird", 1))
+
+
+def test_port_skew_shapes():
+    assert port_skew(8, "uniform") is None
+    hot = port_skew(8, "hotspot", hot=2, hot_mass=0.9)
+    assert hot.shape == (8,) and hot.sum() == pytest.approx(1.0)
+    assert hot[:2].sum() == pytest.approx(0.9)
+    z = port_skew(8, "zipf", a=1.5)
+    assert z.sum() == pytest.approx(1.0)
+    assert (np.diff(z) < 0).all()  # strictly decreasing with rank
+    with pytest.raises(ValueError):
+        port_skew(8, "bimodal")
+
+
+def test_sample_coflows_respects_skew_and_bounds():
+    m = 8
+    skew = port_skew(m, "hotspot", hot=1, hot_mass=0.95)
+    demands = sample_coflows(m, 20, seed=3,
+                             width_dist=("uniform", m, 2 * m),
+                             size_dist=("uniform", 1, 9), size_clip=(1, 9),
+                             dst_skew=skew)
+    for d in demands:
+        assert d.shape == (m, m) and (np.diag(d) == 0).all()
+        assert d[d > 0].min() >= 1
+    # hot receiver draws the bulk of the traffic
+    col = sum(d.sum(axis=0) for d in demands)
+    assert col[0] > 0.5 * col.sum()
+
+
+def test_dag_edges_families():
+    rng = np.random.default_rng(0)
+    assert dag_edges(5, "chain", rng) == [(k, k + 1) for k in range(4)]
+    assert dag_edges(5, "star", rng) == [(a, 4) for a in range(4)]
+    assert dag_edges(5, "independent", rng) == []
+    tree = dag_edges(5, "tree", rng)
+    assert len(tree) == 4 and all(a < b for a, b in tree)
+    gen = dag_edges(5, "general", rng)
+    assert all(a < b for a, b in gen)
+    assert dag_edges(1, "general", rng) == []
+    with pytest.raises(ValueError):
+        dag_edges(5, "torus", rng)
