@@ -92,6 +92,52 @@ def backend_dispatch_bench():
          "identical=True;note=interpret-mode timing, not TPU perf")
 
 
+def cap_to_slack_bench():
+    """Backfill inner loop: vectorized _cap_to_slack vs the scalar greedy
+    reference on a shuffle_heavy/incast-shaped call (many edges, plentiful
+    slack — the fast path that dominates every sweep interval), plus a
+    conflict-heavy call that exercises the scalar fallback."""
+    from repro.core.backfill import _cap_to_slack, _cap_to_slack_scalar
+
+    rng = np.random.default_rng(0)
+    m, e = 150, 2000
+    srcs = rng.integers(0, m, e)
+    dsts = rng.integers(0, m, e)
+    want = rng.random(e) * 3
+    wide_s = np.full(m, 100.0)
+    wide_r = np.full(m, 100.0)
+    tight_s = rng.random(m) * 2
+    tight_r = rng.random(m) * 2
+    for name, s0, r0 in (("wide", wide_s, wide_r), ("tight", tight_s, tight_r)):
+        got_v, us_v = timed(lambda: _cap_to_slack(
+            want, srcs, dsts, s0.copy(), r0.copy()))
+        got_s, us_s = timed(lambda: _cap_to_slack_scalar(
+            want, srcs, dsts, s0.copy(), r0.copy()))
+        assert np.array_equal(got_v, got_s), "cap_to_slack fast path diverged"
+        emit(f"backfill_cap_to_slack_{name}", us_v,
+             f"scalar_us={us_s:.1f};speedup={us_s / max(us_v, 1e-9):.1f}x;"
+             f"edges={e};m={m}")
+
+
+def backfill_executor_bench():
+    """Packet vs ledger backfill executors on a dense shuffle_heavy plan:
+    wall time per re-execution plus the twct each executor reports (packet
+    is pointwise <= the plan by construction)."""
+    from repro import scenarios
+    from repro.core import backfill, plan
+
+    built = scenarios.build("shuffle_heavy", m=10, seed=0, scale=0.25)
+    p = plan(built.instance, "gdm", seed=0)
+    planned = p.twct()
+    for q in p.schedule.parts:  # pre-build the lazy decomposition so both
+        q.coflow_intervals()    # executors are timed per re-execution
+    for exec_ in ("packet", "ledger"):
+        bf, us = timed(backfill, p.schedule, True, exec_)
+        emit(f"backfill_exec_{exec_}", us,
+             f"twct={bf.twct():.0f};plan_twct={planned:.0f};"
+             f"never_worse={bf.twct() <= planned + 1e-9}")
+
+
 def engine_cache_bench():
     """Incremental online path vs from-scratch: same seeded workload, same
     twct by construction; derived reports the BNA-cache hit rate and the
@@ -117,4 +163,6 @@ def run():
     ssd_scan_bench()
     coflow_merge_bench()
     backend_dispatch_bench()
+    cap_to_slack_bench()
+    backfill_executor_bench()
     engine_cache_bench()

@@ -36,6 +36,12 @@ def main() -> None:
                     choices=("auto", "numpy", "pallas"),
                     help="route merge_and_fix alphas through this backend "
                          "(default: REPRO_ALPHA_BACKEND or auto)")
+    ap.add_argument("--backfill-exec", default="packet",
+                    choices=("packet", "ledger"),
+                    help="backfill executor for the *_bf schedulers in the "
+                         "scenario matrix (packet: timed-matching re-"
+                         "execution, never worse than the plan; ledger: "
+                         "historical uniform-rate sweep)")
     args = ap.parse_args()
     args.fast = not (args.standard or args.paper)
 
@@ -82,7 +88,7 @@ def main() -> None:
                                               else "fast")
         scenario_matrix.run(
             args.scenario.split(",") if args.scenario else None,
-            profile=profile)
+            profile=profile, backfill_exec=args.backfill_exec)
     if "planner" in want:
         planner_ab.run()
     if "kernels" in want:

@@ -16,13 +16,15 @@ from . import common
 
 
 def run(scenario_names: list[str] | None = None, profile: str = "fast",
-        seed: int = 0) -> None:
+        seed: int = 0, backfill_exec: str = "packet") -> None:
     names = scenario_names or scenarios.names()
     for scen in names:
         built = common.build_scenario(scen, profile=profile, seed=seed)
         twcts: dict[str, float] = {}
         for sched in sorted(available_schedulers()):
             opts = scenarios.scheduler_opts(sched, built.meta)
+            if sched.endswith("_bf"):
+                opts["exec"] = backfill_exec
             p, us = common.timed(plan, built.instance, sched, seed=seed, **opts)
             twcts[sched] = p.twct()
             common.emit(f"scenario_{scen}_{sched}", us,

@@ -22,6 +22,11 @@ gdm_rt_bf  G-DM-RT + backfilling (§VII)
 om_alg_bf  O(m)Alg + backfilling (§VII)
 ========== ==============================================================
 
+The ``*_bf`` variants accept ``exec="packet"`` (default: matching-granular
+re-execution of the plan's timed-matching decomposition, pointwise never
+worse than the plan) or ``exec="ledger"`` (the historical uniform-rate
+ledger sweep) — see ``backfill.py`` for the two-executor model.
+
 Adding a scheduler is one decorator::
 
     @register_scheduler("my_sched", "one-line description")
@@ -116,11 +121,20 @@ class PlanResult:
     def makespan(self) -> float:
         return float(self.schedule.makespan)
 
-    def backfilled(self) -> "PlanResult":
-        """Backfill this plan (§VII) without re-planning."""
+    def backfilled(self, exec: str = "packet") -> "PlanResult":
+        """Backfill this plan (§VII) without re-planning.
+
+        exec="packet" (default) re-executes the timed-matching decomposition
+        (pointwise never worse than the plan); exec="ledger" re-executes the
+        uniform-rate ledger (the historical executor)."""
         if isinstance(self.schedule, BackfillResult):
+            if self.schedule.executor != exec:
+                raise ValueError(
+                    f"already backfilled with exec={self.schedule.executor!r}; "
+                    f"a BackfillResult cannot be re-executed as {exec!r} — "
+                    f"plan the base scheduler and call backfill(..., exec=...)")
             return self
-        return PlanResult(f"{self.name}_bf", backfill(self.schedule))
+        return PlanResult(f"{self.name}_bf", backfill(self.schedule, exec=exec))
 
 
 _Factory = Callable[..., "CompositeSchedule | BackfillResult"]
@@ -210,19 +224,24 @@ def _om_alg(instance: Instance, *, decompose: bool = False,
     return om_alg(instance, decompose=decompose)
 
 
-@register_scheduler("gdm_bf", "G-DM + backfilling (§VII)")
-def _gdm_bf(instance: Instance, **opts) -> BackfillResult:
-    return backfill(_gdm(instance, **opts))
+@register_scheduler("gdm_bf", "G-DM + backfilling (§VII); exec=packet|ledger")
+def _gdm_bf(instance: Instance, *, exec: str = "packet",
+            **opts) -> BackfillResult:
+    return backfill(_gdm(instance, **opts), exec=exec)
 
 
-@register_scheduler("gdm_rt_bf", "G-DM-RT + backfilling (§VII)")
-def _gdm_rt_bf(instance: Instance, **opts) -> BackfillResult:
-    return backfill(_gdm_rt(instance, **opts))
+@register_scheduler("gdm_rt_bf", "G-DM-RT + backfilling (§VII); "
+                                 "exec=packet|ledger")
+def _gdm_rt_bf(instance: Instance, *, exec: str = "packet",
+               **opts) -> BackfillResult:
+    return backfill(_gdm_rt(instance, **opts), exec=exec)
 
 
-@register_scheduler("om_alg_bf", "O(m)Alg + backfilling (§VII)")
-def _om_alg_bf(instance: Instance, **opts) -> BackfillResult:
-    return backfill(_om_alg(instance, **opts))
+@register_scheduler("om_alg_bf", "O(m)Alg + backfilling (§VII); "
+                                 "exec=packet|ledger")
+def _om_alg_bf(instance: Instance, *, exec: str = "packet",
+               **opts) -> BackfillResult:
+    return backfill(_om_alg(instance, **opts), exec=exec)
 
 
 # --------------------------------------------------------------------------

@@ -49,19 +49,26 @@ class OnlineResult:
         return max(self.job_completions.values(), default=0.0)
 
 
-def _resolve_scheduler(scheduler) -> SchedulerFn:
+def _resolve_scheduler(scheduler, opts: dict | None = None) -> SchedulerFn:
     if isinstance(scheduler, str):
         from .engine import make_scheduler
 
-        return make_scheduler(scheduler).plan
+        return make_scheduler(scheduler, **(opts or {})).plan
+    if opts:
+        raise TypeError("scheduler options are only accepted with a "
+                        "scheduler name, not a prebuilt scheduler")
     plan = getattr(scheduler, "plan", None)
     if callable(plan) and not isinstance(scheduler, type):
         return plan
     return scheduler
 
 
-def simulate_online(instance: Instance, scheduler) -> OnlineResult:
-    scheduler = _resolve_scheduler(scheduler)
+def simulate_online(instance: Instance, scheduler, **opts) -> OnlineResult:
+    """Run the rescheduling protocol.  `scheduler` may be a callable, an
+    engine Scheduler, or a registered name; with a name, **opts are bound
+    through the registry (e.g. ``simulate_online(inst, "gdm_bf",
+    exec="ledger")`` selects the backfill executor for every replan)."""
+    scheduler = _resolve_scheduler(scheduler, opts)
     jobs = sorted(instance.jobs, key=lambda j: (j.release, j.jid))
     remaining: dict[tuple[int, int], np.ndarray] = {
         (j.jid, c.cid): c.demand.astype(np.int64).copy()

@@ -79,6 +79,7 @@ def verify_schedule(instance: Instance, sched: CompositeSchedule | FinalSchedule
 def verify_transcript(
     instance: Instance, transcript: Transcript,
     check_capacity: bool = False, tol: float = 1e-6,
+    makespan: float | None = None,
 ) -> None:
     """Invariants of an executed-transmission Transcript (any scheduler,
     including backfilled results which have no CompositeSchedule parts):
@@ -93,7 +94,11 @@ def verify_transcript(
           transcripts are exactly capacity-feasible at this level — plain
           schedulers' ledgers are a documented uniform-rate approximation
           (their exact feasibility is packet-level: `verify_schedule` with
-          decompose=True).
+          decompose=True);
+    (v)   optionally, makespan consistency: pass the executor's reported
+          `makespan` and it must cover every coflow completion — including
+          zero-demand markers, which transmit nothing but still complete
+          (an instance whose jobs are all empty has a positive makespan).
     """
     per: dict[tuple[int, int], list] = {}
     for e in transcript.entries:
@@ -116,6 +121,10 @@ def verify_transcript(
                     f"coflow {key} transmits before release"
 
     comp = transcript.coflow_completions()
+    if makespan is not None and comp:
+        worst = max(comp.values())
+        assert makespan >= worst - tol, \
+            f"makespan {makespan} < last coflow completion {worst}"
     for j in instance.jobs:
         for a, b in j.edges:
             if (j.jid, a) not in comp or (j.jid, b) not in per:

@@ -15,10 +15,17 @@ because expansion is order-preserving, and the expanded schedule is feasible
 (BNA serves the merged demand within l_I * alpha_I exactly).
 
 Accounting uses a *ledger*: one entry per coflow attributing its flow units
-uniformly over its scheduled window; completions, online truncation, and
-backfilling all read the ledger. The ledger is exact for completion times
-(a coflow's BNA finishes exactly at its window end) and a documented
-uniform-rate approximation for mid-window truncation.
+uniformly over its scheduled window; completions and online truncation read
+the ledger. The ledger is exact for completion times (a coflow's BNA
+finishes exactly at its window end) and a documented uniform-rate
+approximation for mid-window truncation.
+
+For exact re-execution, `FinalSchedule.coflow_intervals()` exposes the
+expanded schedule as a per-coflow timed-matching decomposition: rate-1 edge
+intervals attributed to their (jid, cid), a refinement of the packet-level
+matchings (built lazily from the retained merged edges when the schedule
+was produced with decompose=False). The packet-level backfill executor
+consumes this instead of the ledger approximation.
 """
 from __future__ import annotations
 
@@ -40,22 +47,34 @@ __all__ = [
 @dataclass
 class EdgeIntervals:
     """Struct-of-arrays: edge (s[i], r[i]) active (rate 1) over [t0[i], t1[i]),
-    attributed to scheduling unit owner[i] (exact-completion accounting)."""
+    attributed to scheduling unit owner[i] (exact-completion accounting) and
+    to its originating coflow (jid[i], cid[i]).  The owner is relative to the
+    current merge level (job id inside DMA, coflow id inside DMA-SRT, ...);
+    the (jid, cid) channels are global and survive every re-packaging, which
+    is what lets a FinalSchedule expose its timed-matching decomposition per
+    coflow (the packet-level backfill executor consumes that)."""
 
     t0: np.ndarray
     t1: np.ndarray
     s: np.ndarray
     r: np.ndarray
     owner: np.ndarray = None
+    jid: np.ndarray = None
+    cid: np.ndarray = None
 
     def __post_init__(self):
         if self.owner is None:
             self.owner = np.zeros_like(self.t0)
+        if self.jid is None:
+            self.jid = np.full_like(self.t0, -1)
+        if self.cid is None:
+            self.cid = np.full_like(self.t0, -1)
 
     @staticmethod
     def empty() -> "EdgeIntervals":
         z = np.zeros(0, dtype=np.int64)
-        return EdgeIntervals(z.copy(), z.copy(), z.copy(), z.copy(), z.copy())
+        return EdgeIntervals(z.copy(), z.copy(), z.copy(), z.copy(), z.copy(),
+                             z.copy(), z.copy())
 
     @staticmethod
     def concat(parts: list["EdgeIntervals"]) -> "EdgeIntervals":
@@ -68,15 +87,17 @@ class EdgeIntervals:
             np.concatenate([p.s for p in parts]),
             np.concatenate([p.r for p in parts]),
             np.concatenate([p.owner for p in parts]),
+            np.concatenate([p.jid for p in parts]),
+            np.concatenate([p.cid for p in parts]),
         )
 
     def shifted(self, dt: int) -> "EdgeIntervals":
         return EdgeIntervals(self.t0 + dt, self.t1 + dt, self.s, self.r,
-                             self.owner)
+                             self.owner, self.jid, self.cid)
 
     def with_owner(self, uid: int) -> "EdgeIntervals":
         return EdgeIntervals(self.t0, self.t1, self.s, self.r,
-                             np.full_like(self.t0, uid))
+                             np.full_like(self.t0, uid), self.jid, self.cid)
 
     @property
     def size(self) -> int:
@@ -117,7 +138,8 @@ class UnitSchedule:
 
 
 def bna_pieces_to_edge_intervals(
-    pieces: list[tuple[int, np.ndarray]], start: int, owner: int = 0
+    pieces: list[tuple[int, np.ndarray]], start: int, owner: int = 0,
+    jid: int = -1, cid: int = -1,
 ) -> EdgeIntervals:
     """RLE-compress BNA (duration, matching) pieces into edge intervals."""
     t0s: list[int] = []
@@ -150,6 +172,8 @@ def bna_pieces_to_edge_intervals(
         np.asarray(ss, dtype=np.int64),
         np.asarray(rs, dtype=np.int64),
         np.full(n, owner, dtype=np.int64),
+        np.full(n, jid, dtype=np.int64),
+        np.full(n, cid, dtype=np.int64),
     )
 
 
@@ -161,7 +185,8 @@ def unit_from_coflow_plan(
     from .types import effective_size
 
     D = effective_size(demand)
-    edges = bna_pieces_to_edge_intervals(pieces, start, owner=cid)
+    edges = bna_pieces_to_edge_intervals(pieces, start, owner=cid,
+                                         jid=jid, cid=cid)
     s_idx, r_idx = np.nonzero(demand)
     entry = LedgerEntry(
         jid=jid, cid=cid, t0=start, t1=start + D,
@@ -205,6 +230,8 @@ class FinalSchedule:
     ledger: list[MappedEntry]
     decomposition: list[DecompPiece] | None = None
     exact_completion: dict[int, float] | None = None  # per unit uid (packet-exact)
+    merged: EdgeIntervals | None = None  # pre-expansion merged edge intervals
+    coflow_edges: EdgeIntervals | None = None  # expanded, (jid, cid)-attributed
     _coflow_completion: dict[tuple[int, int], float] | None = None
 
     # --- time mapping -----------------------------------------------------
@@ -264,22 +291,36 @@ class FinalSchedule:
     def end(self) -> float:
         return float(self.exp[-1]) if self.exp.size else float(self.origin)
 
+    # --- per-coflow timed-matching decomposition ----------------------------
+    def coflow_intervals(self) -> EdgeIntervals:
+        """The expanded-time edge-interval decomposition attributed per
+        coflow: each row is an edge (s, r) transmitting at rate 1 over
+        [t0, t1) on behalf of coflow (jid[i], cid[i]).  Rows are a refinement
+        of the packet-level matching decomposition, so their union is
+        capacity-feasible by construction — this is what the packet-level
+        backfill executor re-executes.
+
+        Built lazily from the retained merged edges when the schedule was
+        produced with decompose=False; public `decomposition` /
+        `exact_completion` accounting is left untouched in that case so plan
+        metrics stay order-independent."""
+        if self.coflow_edges is None:
+            if self.merged is None:
+                raise ValueError("coflow_intervals requires the merged edge "
+                                 "intervals (schedule predates merge_and_fix)")
+            _, _, self.coflow_edges = _decompose(
+                self.events, self.merged, self.alphas, self.exp, self.m)
+        return self.coflow_edges
+
     # --- nesting ------------------------------------------------------------
     def to_unit(self, uid: int) -> UnitSchedule:
-        """Re-package as a UnitSchedule (requires decomposition) for use at an
-        outer merge level (DMA-RT merges whole DMA-SRT schedules)."""
+        """Re-package as a UnitSchedule for use at an outer merge level
+        (DMA-RT merges whole DMA-SRT schedules).  Edges are the per-coflow
+        timed-matching rows, so the (jid, cid) attribution survives the
+        outer merge_and_fix."""
         if self.decomposition is None:
             raise ValueError("to_unit requires decompose=True")
-        parts: list[EdgeIntervals] = []
-        for p in self.decomposition:
-            n = p.srcs.size
-            parts.append(EdgeIntervals(
-                np.full(n, p.t0, dtype=np.int64),
-                np.full(n, p.t0 + p.dur, dtype=np.int64),
-                p.srcs.astype(np.int64), p.dsts.astype(np.int64),
-                np.full(n, uid, dtype=np.int64),
-            ))
-        edges = EdgeIntervals.concat(parts)
+        edges = self.coflow_intervals().with_owner(uid)
         ledger = [LedgerEntry(e.jid, e.cid, int(round(e.e0)), int(round(e.e1)),
                               e.srcs, e.dsts, e.units) for e in self.ledger]
         return UnitSchedule(uid=uid, edges=edges, ledger=ledger)
@@ -382,6 +423,7 @@ def merge_and_fix(
         alphas=alphas,
         exp=exp if K else np.zeros(0),
         ledger=[],
+        merged=edges,
     )
 
     # map ledgers through the expansion
@@ -393,15 +435,15 @@ def merge_and_fix(
             sched.ledger.append(MappedEntry(e.jid, e.cid, e0, e1, e.srcs, e.dsts, e.units))
 
     if decompose:
-        sched.decomposition, sched.exact_completion = _decompose(
-            events, edges, alphas, exp, m)
+        sched.decomposition, sched.exact_completion, sched.coflow_edges = \
+            _decompose(events, edges, alphas, exp, m)
     return sched
 
 
 def _decompose(
     events: np.ndarray, edges: EdgeIntervals, alphas: np.ndarray,
     exp: np.ndarray, m: int,
-) -> tuple[list[DecompPiece], dict[int, float]]:
+) -> tuple[list[DecompPiece], dict[int, float], EdgeIntervals]:
     """Packet-level fix-up: per interval, BNA(l_I x merged counts), plus
     PACKET-EXACT per-unit completion times: within each interval, an edge's
     merged units are attributed FIFO to the contributing units (activation
@@ -409,14 +451,50 @@ def _decompose(
     last packet — the quantity the paper's simulator measures, much tighter
     than the expanded-window end.
 
+    The same FIFO walk records each served stretch as an expanded-time edge
+    interval attributed to its (jid, cid) — the per-coflow timed-matching
+    decomposition (FinalSchedule.coflow_intervals).  The segments tile the
+    packet-level pieces exactly, so per coflow and edge their total length
+    equals the coflow's demand on that edge, and at any instant the active
+    segments form a matching.
+
     Fast path: alpha_I == 1 means the merged active edges already form a
     matching — emit directly without BNA."""
     from .bna import bna
 
     pieces: list[DecompPiece] = []
     completion: dict[int, float] = {}
+    seg_t0: list[int] = []
+    seg_t1: list[int] = []
+    seg_s: list[int] = []
+    seg_r: list[int] = []
+    seg_own: list[int] = []
+    seg_jid: list[int] = []
+    seg_cid: list[int] = []
+
+    def emit_seg(t0: int, t1: int, s: int, r: int, key3) -> None:
+        if t1 > t0:
+            seg_t0.append(t0)
+            seg_t1.append(t1)
+            seg_s.append(s)
+            seg_r.append(r)
+            seg_own.append(key3[0])
+            seg_jid.append(key3[1])
+            seg_cid.append(key3[2])
+
+    def pack() -> EdgeIntervals:
+        return EdgeIntervals(
+            np.asarray(seg_t0, dtype=np.int64),
+            np.asarray(seg_t1, dtype=np.int64),
+            np.asarray(seg_s, dtype=np.int64),
+            np.asarray(seg_r, dtype=np.int64),
+            np.asarray(seg_own, dtype=np.int64),
+            np.asarray(seg_jid, dtype=np.int64),
+            np.asarray(seg_cid, dtype=np.int64),
+        )
+
     if edges.size == 0:
-        return pieces, completion
+        return pieces, completion, pack()
     K = alphas.size
     si = np.searchsorted(events, edges.t0)
     ei = np.searchsorted(events, edges.t1)
@@ -425,16 +503,16 @@ def _decompose(
     for i in range(edges.size):
         add_at[si[i]].append(i)
         rem_at[ei[i]].append(i)
-    # per edge: ordered list of (activation_seq, owner, multiplicity)
+    # per edge: ordered list of (activation_seq, (owner, jid, cid), mult)
     active: dict[tuple[int, int], list] = {}
     seq = 0
     for k in range(K):
         for i in rem_at[k]:
             key = (int(edges.s[i]), int(edges.r[i]))
-            own = int(edges.owner[i])
+            k3 = (int(edges.owner[i]), int(edges.jid[i]), int(edges.cid[i]))
             lst = active[key]
             for j, ent in enumerate(lst):
-                if ent[1] == own:
+                if ent[1] == k3:
                     if ent[2] == 1:
                         lst.pop(j)
                     else:
@@ -444,14 +522,14 @@ def _decompose(
                 del active[key]
         for i in add_at[k]:
             key = (int(edges.s[i]), int(edges.r[i]))
-            own = int(edges.owner[i])
+            k3 = (int(edges.owner[i]), int(edges.jid[i]), int(edges.cid[i]))
             lst = active.setdefault(key, [])
             for ent in lst:
-                if ent[1] == own:
+                if ent[1] == k3:
                     ent[2] += 1
                     break
             else:
-                lst.append([seq, own, 1])
+                lst.append([seq, k3, 1])
                 seq += 1
         if not active:
             continue
@@ -465,14 +543,17 @@ def _decompose(
         cnts = np.array([sum(e[2] for e in lst) for lst in active.values()],
                         dtype=np.int64)
         # FIFO queues for this interval: per edge, units in activation order
-        queues = {key: [[own, mult * l] for _, own, mult in sorted(lst)]
+        queues = {key: [[k3, mult * l] for _, k3, mult in sorted(lst)]
                   for key, lst in active.items()}
         if a <= 1:
             pieces.append(DecompPiece(t_exp, l, srcs, dsts, np.ones_like(cnts)))
             end = float(t_exp + l)
             for key, q in queues.items():
-                for own, _ in q:
-                    completion[own] = max(completion.get(own, 0.0), end)
+                cursor = t_exp
+                for k3, amt in q:
+                    emit_seg(cursor, cursor + amt, key[0], key[1], k3)
+                    cursor += amt
+                    completion[k3[0]] = max(completion.get(k3[0], 0.0), end)
             continue
         dm = np.zeros((m, m), dtype=np.int64)
         dm[srcs, dsts] = cnts * l
@@ -488,19 +569,21 @@ def _decompose(
                 if not q:
                     continue
                 served = int(dur)
+                used = 0
                 while served > 0 and q:
-                    own, rem = q[0]
+                    k3, rem = q[0]
                     take = min(rem, served)
                     rem -= take
                     served -= take
+                    emit_seg(t_exp + off + used, t_exp + off + used + take,
+                             key[0], key[1], k3)
+                    used += take
                     if rem == 0:
                         q.pop(0)
-                        completion[own] = max(completion.get(own, 0.0),
-                                              piece_end)
                     else:
                         q[0][1] = rem
-                        completion[own] = max(completion.get(own, 0.0),
-                                              piece_end)
+                    completion[k3[0]] = max(completion.get(k3[0], 0.0),
+                                            piece_end)
             off += int(dur)
         assert off == l * a, "fix-up BNA length mismatch"
-    return pieces, completion
+    return pieces, completion, pack()

@@ -10,10 +10,13 @@ to the repo's core invariants:
     schedulers; exact transcript-level for the backfilled ones;
   * simulator-replay        — the scheduler's reported completion times
     match an independent replay of its transcript;
-  * backfill-no-worse       — filling leftover capacity never increases
-    TWCT relative to the same capacity-exact executor without filling
-    (the null-backfill comparator; see backfill.py for why the plan's
-    optimistic ledger window-ends are not the right comparator);
+  * backfill-never-worse    — the packet-level executor (exec="packet",
+    the default) re-executes the plan's timed-matching decomposition, so
+    backfilling is POINTWISE no worse than the planned TWCT on every
+    scenario x scheduler cell — the paper's premise, restored; the ledger
+    executor (exec="ledger") keeps only fill-monotonicity vs its
+    null-backfill comparator (see backfill.py for why ledger window-ends
+    are not pointwise comparable);
   * fixed-seed determinism  — generators and schedulers are bit-stable
     under a fixed seed;
   * online == offline       — the §VII-C.2 online protocol reproduces the
@@ -119,19 +122,28 @@ def _assert_invariants(built: scenarios.BuiltScenario, sched: str,
             f"{sched}: job {jid} reported {t} but transcript replays {replay[jid]}"
 
     # precedence/conservation/release at the transcript level; backfilled
-    # transcripts are additionally exactly capacity-feasible there
+    # transcripts are additionally exactly capacity-feasible there and
+    # their makespan must cover every completion (zero-demand markers too)
     verify_transcript(inst, p.transcript(),
-                      check_capacity=sched.endswith("_bf"))
+                      check_capacity=sched.endswith("_bf"),
+                      makespan=p.makespan if sched.endswith("_bf") else None)
 
     if not sched.endswith("_bf"):
         # packet-level capacity-feasibility (matchings, time-disjoint)
         pd = plan(inst, sched, seed=seed, decompose=True, **opts)
         verify_schedule(inst, pd.schedule)
-        # backfill-no-worse vs the null-backfill comparator
+        # backfill-never-worse, POINTWISE vs the planned TWCT (the packet
+        # executor re-executes the plan's own decomposition, so step 1 is
+        # never capacity-capped and filling can only help)
+        planned = p.twct()
         filled = plan(inst, sched + "_bf", seed=seed, **opts).twct()
-        null = backfill(p.schedule, fill=False).twct()
-        assert filled <= null * (1 + 1e-9) + 1e-9, \
-            f"{sched}_bf twct {filled} > null-backfill {null}"
+        assert filled <= planned * (1 + 1e-9) + 1e-9, \
+            f"{sched}_bf (packet) twct {filled} > planned {planned}"
+        # the ledger executor keeps its weaker guarantee: monotone in fill
+        led = backfill(p.schedule, exec="ledger").twct()
+        null = backfill(p.schedule, fill=False, exec="ledger").twct()
+        assert led <= null * (1 + 1e-9) + 1e-9, \
+            f"{sched}_bf (ledger) twct {led} > null-backfill {null}"
 
     # online == offline when all releases are 0
     inst0 = scenarios.strip_releases(inst)
@@ -229,6 +241,114 @@ def test_scenario_generators_deterministic(seed):
         b = scenarios.build(name, seed=seed, **TINY[name])
         assert _instances_equal(a.instance, b.instance), \
             f"{name} is not seed-deterministic"
+
+
+# --- backfill executors (packet vs ledger) ----------------------------------
+
+def test_backfill_comparator_deep_chain_larger_m():
+    """The exact PR-2 regression shape: on deep_chain at larger m the
+    ledger executor's capacity capping defers work past its planned windows
+    and its re-executed TWCT EXCEEDS the plan's, while the packet executor
+    — re-executing the plan's own timed-matching decomposition — is
+    pointwise never worse.  CI runs this as its own `backfill-comparator`
+    step so the restored guarantee stays pinned to the shape that broke it."""
+    built = scenarios.build("deep_chain", seed=0, m=12, scale=0.4)
+    inst = built.instance
+    ledger_excess = {}
+    for sched in ("gdm", "gdm_rt", "om_alg"):
+        opts = scenarios.scheduler_opts(sched, built.meta)
+        p = plan(inst, sched, seed=0, **opts)
+        planned = p.twct()
+        packet = backfill(p.schedule, exec="packet").twct()
+        ledger = backfill(p.schedule, exec="ledger").twct()
+        assert packet <= planned * (1 + 1e-9) + 1e-9, \
+            f"{sched}: packet backfill {packet} > planned {planned}"
+        ledger_excess[sched] = ledger - planned
+    # the comparator is non-vacuous: the ledger executor really does exceed
+    # the plan here (this is the shape the packet executor exists to fix)
+    assert max(ledger_excess.values()) > 0, ledger_excess
+
+
+@pytest.mark.parametrize("exec_", ["packet", "ledger"])
+def test_zero_demand_tail_coflow_completes_with_parents(exec_):
+    """A job whose LAST coflow is empty must complete when its parents do
+    (plus release), not at the empty coflow's planned window end — stamping
+    the planned end inflates job completion (and TWCT) whenever backfilling
+    finishes the parents early."""
+    from repro.core import Coflow, Instance, Job
+
+    d0 = np.zeros((4, 4), dtype=np.int64)
+    d0[0, 1] = 4
+    d1 = np.zeros((4, 4), dtype=np.int64)
+    d1[2, 3] = 4
+    jobs = [
+        Job(0, [Coflow(0, 0, d0),
+                Coflow(0, 1, np.zeros((4, 4), dtype=np.int64))], [(0, 1)],
+            weight=1.0),
+        Job(1, [Coflow(1, 0, d1)], [], weight=50.0),
+    ]
+    inst = Instance(4, jobs)
+    p = plan(inst, "om_alg", seed=0)
+    planned_job0 = p.job_completions()[0]
+    bf = backfill(p.schedule, exec=exec_)
+    comp = bf.coflow_completions
+    assert comp[(0, 1)] == comp[(0, 0)], \
+        "empty tail coflow must complete with its parent"
+    assert bf.job_completions[0] == comp[(0, 0)]
+    # backfilling finished job 0 early into job 1's window; the empty tail
+    # must not drag completion back to its planned end
+    assert bf.job_completions[0] < planned_job0
+    verify_transcript(inst, bf.transcript, check_capacity=True,
+                      makespan=bf.makespan)
+
+
+@pytest.mark.parametrize("exec_", ["packet", "ledger"])
+def test_makespan_covers_zero_demand_completions(exec_):
+    """An instance whose jobs all have zero-demand coflows transmits
+    nothing, but its completions are positive (release-stamped markers) —
+    makespan must cover them instead of reporting 0.0."""
+    from repro.core import Coflow, Instance, Job
+
+    z = np.zeros((4, 4), dtype=np.int64)
+    jobs = [
+        Job(0, [Coflow(0, 0, z.copy())], [], release=5),
+        Job(1, [Coflow(1, 0, z.copy()), Coflow(1, 1, z.copy())], [(0, 1)],
+            release=7),
+    ]
+    inst = Instance(4, jobs)
+    p = plan(inst, "om_alg", seed=0)
+    bf = backfill(p.schedule, exec=exec_)
+    assert bf.coflow_completions[(0, 0)] == 5.0
+    assert bf.coflow_completions[(1, 1)] == 7.0
+    assert bf.makespan >= max(bf.coflow_completions.values())
+    verify_transcript(inst, bf.transcript, makespan=bf.makespan)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_packet_executor_capacity_and_replay(seed):
+    """Property: the packet executor's per-interval port load never exceeds
+    capacity (exact transcript-level feasibility), its makespan covers every
+    completion, and its reported completions agree with an independent
+    replay of the executed transcript."""
+    names = scenarios.names()
+    name = names[seed % len(names)]
+    built = scenarios.build(name, seed=seed, **TINY[name])
+    inst = built.instance
+    sched = ("gdm", "gdm_rt", "om_alg")[seed % 3]
+    opts = scenarios.scheduler_opts(sched, built.meta)
+    p = plan(inst, sched, seed=seed % 17, **opts)
+    bf = backfill(p.schedule, exec="packet")
+    verify_transcript(inst, bf.transcript, check_capacity=True,
+                      makespan=bf.makespan)
+    replay = bf.transcript.job_completions()
+    for jid, t in bf.job_completions.items():
+        assert replay[jid] == pytest.approx(t, abs=1e-6), \
+            f"{name}/{sched}: job {jid} reported {t}, replay {replay[jid]}"
+    # and filling is monotone for the packet executor too: fill=False is an
+    # exact replay of the plan, so it can only be slower
+    assert bf.twct() <= backfill(p.schedule, fill=False,
+                                 exec="packet").twct() * (1 + 1e-9) + 1e-9
 
 
 # --- seed determinism of the trace primitives (satellite) -------------------
