@@ -158,6 +158,70 @@ def engine_cache_bench():
          f"speedup_vs_cold={speedup:.2f};reschedules={inc.reschedules}")
 
 
+def session_repair_bench():
+    """Frontier-append plan repair (core/session.py): a stream of arrivals
+    landing on the clean cuts of the O(m)Alg sequential schedule, so every
+    replan after the first takes the splice fast path.  Reports the repair
+    hit rate and warm-replan wall-clock from SessionStats (the PR 1
+    cache-stats precedent extended), against the repair-disabled session —
+    results are identical by construction; only planning time differs.
+    Coflows are wide (dense permutation mixes), the shape where the splice
+    pays: a full replan rebuilds every retained coflow's BNA edge intervals,
+    the repair only slices the retained expansion."""
+    from repro.core import (Coflow, Instance, Job, clear_caches,
+                            simulate_online)
+    from repro.core.session import SchedulerSession
+
+    rng = np.random.default_rng(0)
+    m, base, appends = 24, 16, 12
+    jobs = [Job(k, [Coflow(k, 0, _wide_demand(rng, m, 8 + 2 * k))], [],
+                weight=1.0, release=0) for k in range(base)]
+    # each append lands exactly on the next clean cut — the earliest planned
+    # completion on the probe session's live frontier (the event API driving
+    # its own workload generation)
+    probe = SchedulerSession(m, "om_alg")
+    for j in jobs:
+        probe.submit(j)
+    size, w = 60, 0.05
+    for a in range(appends):
+        f = probe.frontier()
+        t = min(v for v in f.completions.values())
+        jid = base + a
+        job = Job(jid, [Coflow(jid, 0, _wide_demand(rng, m, size))], [],
+                  weight=w, release=int(t))
+        jobs.append(job)
+        probe.advance(until=t)
+        probe.submit(job)
+        size, w = size + 2, w / 2
+    inst = Instance(m, jobs)
+    clear_caches()
+    on, us_on = timed(lambda: simulate_online(inst, "om_alg",
+                                              driver="session"))
+    clear_caches()
+    off, us_off = timed(lambda: simulate_online(inst, "om_alg",
+                                                driver="session",
+                                                repair=False))
+    assert on.job_completions == off.job_completions, "repair diverged"
+    s_on, s_off = on.stats["session"], off.stats["session"]
+    emit("session_repair", us_on,
+         f"repairs={s_on['repairs']};"
+         f"repair_hit_pct={100 * s_on['repair_hit_rate']:.0f};"
+         f"warm_replan_ms={1e3 * s_on['warm_replan_wall_s']:.2f};"
+         f"full_replan_warm_ms={1e3 * s_off['warm_replan_wall_s']:.2f};"
+         f"warm_speedup={s_off['warm_replan_wall_s'] / max(s_on['warm_replan_wall_s'], 1e-12):.2f}x;"
+         f"identical=True")
+
+
+def _wide_demand(rng, m, units):
+    """units per edge over several random permutations: effective size ==
+    units * n_perms, every port busy (the dense shape BNA pieces blow up on)."""
+    d = np.zeros((m, m), np.int64)
+    for _ in range(4):
+        d[np.arange(m), rng.permutation(m)] += units
+    np.fill_diagonal(d, 0)
+    return d
+
+
 def run():
     flash_attention_bench()
     ssd_scan_bench()
@@ -166,3 +230,4 @@ def run():
     cap_to_slack_bench()
     backfill_executor_bench()
     engine_cache_bench()
+    session_repair_bench()

@@ -42,6 +42,12 @@ def main() -> None:
                          "scenario matrix (packet: timed-matching re-"
                          "execution, never worse than the plan; ledger: "
                          "historical uniform-rate sweep)")
+    ap.add_argument("--driver", default="session",
+                    choices=("session", "batch"),
+                    help="online-protocol driver for the scenario matrix's "
+                         "online rows (session: event-driven "
+                         "SchedulerSession with frontier-append repair; "
+                         "batch: historical closed loop — results-identical)")
     args = ap.parse_args()
     args.fast = not (args.standard or args.paper)
 
@@ -88,7 +94,8 @@ def main() -> None:
                                               else "fast")
         scenario_matrix.run(
             args.scenario.split(",") if args.scenario else None,
-            profile=profile, backfill_exec=args.backfill_exec)
+            profile=profile, backfill_exec=args.backfill_exec,
+            driver=args.driver)
     if "planner" in want:
         planner_ab.run()
     if "kernels" in want:

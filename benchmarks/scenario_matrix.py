@@ -6,17 +6,26 @@ per-scenario summary row carrying the paper's headline metric (percent TWCT
 improvement of G-DM+backfill over O(m)Alg+backfill) — showing how relative
 algorithm performance shifts across trace shapes, which a single
 FB-calibrated trace cannot.
+
+Scenarios with an online arrival model additionally run the §VII-C.2
+rescheduling protocol through the selected ``driver`` (``session``: the
+event-driven SchedulerSession, frontier-append repair enabled; ``batch``:
+the historical closed loop — the two are results-identical, the
+`session-equivalence` CI job pins it).
 """
 from __future__ import annotations
 
 from repro import scenarios
-from repro.core import available_schedulers, plan
+from repro.core import available_schedulers, plan, simulate_online
 
 from . import common
 
+_ONLINE_SCHEDULERS = ("gdm", "om_alg")
+
 
 def run(scenario_names: list[str] | None = None, profile: str = "fast",
-        seed: int = 0, backfill_exec: str = "packet") -> None:
+        seed: int = 0, backfill_exec: str = "packet",
+        driver: str = "session") -> None:
     names = scenario_names or scenarios.names()
     for scen in names:
         built = common.build_scenario(scen, profile=profile, seed=seed)
@@ -33,3 +42,16 @@ def run(scenario_names: list[str] | None = None, profile: str = "fast",
             gain = 100 * (1 - twcts["gdm_bf"] / twcts["om_alg_bf"])
             common.emit(f"scenario_{scen}_summary", 0.0,
                         f"gdm_bf_vs_om_alg_bf_pct={gain:.1f}")
+        if built.meta.arrival != "offline":
+            for sched in _ONLINE_SCHEDULERS:
+                opts = scenarios.scheduler_opts(sched, built.meta)
+                r, us = common.timed(simulate_online, built.instance, sched,
+                                     driver=driver, seed=seed, **opts)
+                extra = ""
+                if "session" in r.stats:
+                    s = r.stats["session"]
+                    extra = (f";repairs={s['repairs']}"
+                             f";repair_hit_pct={100 * s['repair_hit_rate']:.0f}")
+                common.emit(f"online_{scen}_{sched}_{driver}", us,
+                            f"twct={r.twct():.0f}"
+                            f";reschedules={r.reschedules}{extra}")

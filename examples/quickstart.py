@@ -1,12 +1,13 @@
 """Quickstart: build a workload from the scenario registry, schedule it
-with the paper's G-DM algorithm, and compare against the prior-art O(m)Alg
-baseline — all through the unified scheduler + scenario registries.
+with the paper's G-DM algorithm, compare against the prior-art O(m)Alg
+baseline, then drive the same engine event-by-event through the stateful
+SchedulerSession (the §VII-C.2 online protocol as an API).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 from repro import scenarios
-from repro.core import (available_schedulers, plan, verify_schedule,
-                        workload_stats)
+from repro.core import (SchedulerSession, available_schedulers, plan,
+                        verify_schedule, workload_stats)
 
 
 def main() -> None:
@@ -35,6 +36,24 @@ def main() -> None:
     bf_g, bf_o = sched.backfilled(), base.backfilled()
     print(f"with backfilling: G-DM-RT-BF {bf_g.twct():.0f} "
           f"vs O(m)Alg-BF {bf_o.twct():.0f}")
+
+    # the event-driven session: submit arrivals, advance wall-clock, read
+    # the live frontier — simulate_online/plan_online are thin drivers over
+    # exactly this loop (see README "The session API")
+    online = scenarios.build("online_poisson", m=12, seed=0, scale=0.04)
+    session = SchedulerSession(online.instance.m, "gdm", seed=0)
+    for job in sorted(online.instance.jobs, key=lambda j: j.release):
+        session.advance(until=job.release)
+        session.submit(job)
+        f = session.frontier()
+        print(f"t={session.now:6.0f}  submit job {job.jid:2d}  "
+              f"active={len(f.completions):2d}  busy_until={f.busy_until:.0f}")
+    session.advance()
+    res = session.result()
+    s = res.stats["session"]
+    print(f"session drained: twct={res.twct():.0f} "
+          f"reschedules={res.reschedules} "
+          f"(full={s['full_replans']}, repaired={s['repairs']})")
 
 
 if __name__ == "__main__":

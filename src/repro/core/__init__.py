@@ -11,12 +11,15 @@ from .bna import bna, verify_bna_schedule
 from .dma import cached_bna, dma, isolated_job_unit
 from .dma_srt import dma_rt, dma_srt, path_subjobs, srt_start_times
 from .engine import (PlanResult, Scheduler, available_schedulers,
-                     make_scheduler, plan, plan_online, register_scheduler)
+                     make_scheduler, plan, plan_online, register_scheduler,
+                     scheduler_options)
 from .fsp_reduction import fsp_to_coflow_job
 from .gap_instance import (gap_bounds, gap_hand_schedule, gap_instance,
                            gap_optimal_schedule_length)
 from .gdm import gdm, group_jobs
 from .online import OnlineResult, simulate_online
+from .session import (Frontier, SchedulerSession, SessionSnapshot,
+                      SessionStats)
 from .ordering import OrderResult, cached_job_order, job_order
 from .result import CompositeSchedule, Transcript, twct
 from .simulator import verify_schedule, verify_transcript

@@ -66,6 +66,12 @@ def backfill(sched: CompositeSchedule, fill: bool = True,
     """Re-execute `sched` under exact port capacity, offering leftover
     capacity to eligible flows (fill=True).
 
+    `sched` may be a CompositeSchedule or anything wrapping one behind a
+    ``.schedule`` attribute (an engine PlanResult, including the live plan
+    a SchedulerSession retains — ``session.backfilled_plan()`` routes
+    here), so a session's current residual plan can be backfilled without
+    replanning.
+
     exec="packet" (default) re-executes the timed-matching decomposition and
     restores the pointwise guarantee twct(backfill) <= twct(plan);
     exec="ledger" re-executes the uniform-rate ledger (the pre-packet
@@ -73,6 +79,12 @@ def backfill(sched: CompositeSchedule, fill: bool = True,
     in either executor: for packet that is an exact replay of the plan, for
     ledger it is the *null-backfill* monotonicity comparator (see module
     docstring for why ledger window-ends are not pointwise comparable)."""
+    sched = getattr(sched, "schedule", sched)
+    if isinstance(sched, BackfillResult):
+        raise ValueError(
+            f"already backfilled with exec={sched.executor!r}; a "
+            f"BackfillResult cannot be re-executed — backfill the plain "
+            f"scheduler's plan instead")
     if exec not in _EXECUTORS:
         raise ValueError(f"unknown backfill executor {exec!r}; "
                          f"choose from {_EXECUTORS}")

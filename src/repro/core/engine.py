@@ -35,9 +35,12 @@ Adding a scheduler is one decorator::
 
 Incremental online path
 -----------------------
-:func:`plan_online` wraps the §VII-C.2 rescheduling protocol
-(``simulate_online``) around a registered scheduler and makes the repeated
-replanning incremental via the two engine caches (see ``backend.py``):
+:func:`plan_online` wraps the §VII-C.2 rescheduling protocol around a
+registered scheduler — a thin driver over the event-driven
+:class:`~repro.core.session.SchedulerSession` (``driver="batch"`` selects
+the historical closed loop; ``session.py``'s frontier-append plan repair
+rides on top) — and makes the repeated replanning incremental via the two
+engine caches (see ``backend.py``):
 
 * BNA decompositions are keyed on demand **bytes**, so coflows the previous
   window did not touch hit the cache even though ``_sub_instance`` builds
@@ -78,6 +81,7 @@ __all__ = [
     "register_scheduler",
     "make_scheduler",
     "available_schedulers",
+    "scheduler_options",
     "plan",
     "plan_online",
 ]
@@ -138,16 +142,49 @@ class PlanResult:
 
 
 _Factory = Callable[..., "CompositeSchedule | BackfillResult"]
-_REGISTRY: dict[str, tuple[_Factory, str]] = {}
 
 
-def register_scheduler(name: str, doc: str = ""):
-    """Register `factory(instance, **opts)` under `name` (decorator)."""
+@dataclass
+class _Entry:
+    factory: _Factory
+    doc: str
+    options: tuple[str, ...]
+
+
+_REGISTRY: dict[str, _Entry] = {}
+
+
+def register_scheduler(name: str, doc: str = "",
+                       options: tuple[str, ...] = ()):
+    """Register `factory(instance, **opts)` under `name` (decorator).
+
+    ``options`` declares the option names the factory accepts;
+    :func:`make_scheduler` rejects anything else with an error listing the
+    valid options, so a typo (``execc="ledger"``) fails loudly at
+    construction time instead of being silently swallowed.  The declared
+    tuple is checked against the factory's signature at registration, so
+    it cannot drift: every keyword-only parameter must be declared, and —
+    unless the factory forwards ``**opts`` — every declared option must be
+    a real parameter."""
+    import inspect
 
     def deco(factory: _Factory) -> _Factory:
         if name in _REGISTRY:
             raise ValueError(f"scheduler {name!r} already registered")
-        _REGISTRY[name] = (factory, doc or (factory.__doc__ or "").strip())
+        params = inspect.signature(factory).parameters.values()
+        kw = {p.name for p in params if p.kind == p.KEYWORD_ONLY}
+        has_var = any(p.kind == p.VAR_KEYWORD for p in params)
+        declared = set(options)
+        if kw - declared:
+            raise ValueError(f"scheduler {name!r}: keyword option(s) "
+                             f"{sorted(kw - declared)} missing from the "
+                             f"declared options")
+        if not has_var and declared - kw:
+            raise ValueError(f"scheduler {name!r}: declared option(s) "
+                             f"{sorted(declared - kw)} not accepted by the "
+                             f"factory")
+        _REGISTRY[name] = _Entry(
+            factory, doc or (factory.__doc__ or "").strip(), tuple(options))
         return factory
 
     return deco
@@ -155,7 +192,15 @@ def register_scheduler(name: str, doc: str = ""):
 
 def available_schedulers() -> dict[str, str]:
     """name -> one-line description, for CLIs and reports."""
-    return {name: doc for name, (_, doc) in sorted(_REGISTRY.items())}
+    return {name: e.doc for name, e in sorted(_REGISTRY.items())}
+
+
+def scheduler_options(name: str) -> tuple[str, ...]:
+    """The option names scheduler `name` accepts (for CLIs and errors)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scheduler {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name].options
 
 
 @dataclass
@@ -166,8 +211,8 @@ class _Registered:
     opts: dict = field(default_factory=dict)
 
     def plan_full(self, instance: Instance) -> PlanResult:
-        factory, _ = _REGISTRY[self.name]
-        return PlanResult(self.name, factory(instance, **self.opts))
+        return PlanResult(self.name,
+                          _REGISTRY[self.name].factory(instance, **self.opts))
 
     def plan(self, instance: Instance) -> Transcript:
         return self.plan_full(instance).transcript()
@@ -176,14 +221,21 @@ class _Registered:
 def make_scheduler(name: str, **opts) -> _Registered:
     """Instantiate a registered scheduler with bound options.
 
-    Options are scheduler-specific (beta, seed, nested, decompose, ...).
-    Prefer `seed` over passing an `rng`: a seed re-derives a fresh generator
-    per plan() call, which is what the online driver's repeated replanning
-    expects (and what the legacy closures did).
+    Options are scheduler-specific (beta, seed, nested, decompose, ...) and
+    validated against the registry's declared option names — an unknown
+    option raises immediately with the valid set, so typos cannot be
+    silently swallowed.  Prefer `seed` over passing an `rng`: a seed
+    re-derives a fresh generator per plan() call, which is what the online
+    driver's repeated replanning expects (and what the legacy closures did).
     """
     if name not in _REGISTRY:
         raise KeyError(f"unknown scheduler {name!r}; "
                        f"registered: {sorted(_REGISTRY)}")
+    unknown = sorted(set(opts) - set(_REGISTRY[name].options))
+    if unknown:
+        raise TypeError(
+            f"unknown option(s) {unknown} for scheduler {name!r}; "
+            f"valid options: {sorted(_REGISTRY[name].options)}")
     return _Registered(name, opts)
 
 
@@ -200,8 +252,14 @@ def _rng(opts_rng, seed):
     return np.random.default_rng(seed) if opts_rng is None else opts_rng
 
 
+_GDM_OPTS = ("beta", "seed", "rng", "nested", "decompose")
+_GDM_RT_OPTS = _GDM_OPTS + ("require_tree",)
+_OM_ALG_OPTS = ("decompose", "seed")
+
+
 @register_scheduler("gdm", "G-DM (Algorithm 4): primal-dual order + "
-                           "geometric groups + DMA per group")
+                           "geometric groups + DMA per group",
+                    options=_GDM_OPTS)
 def _gdm(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
          nested: bool = True, decompose: bool = False) -> CompositeSchedule:
     return gdm(instance, beta=beta, rng=_rng(rng, seed), rooted=False,
@@ -209,7 +267,8 @@ def _gdm(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
 
 
 @register_scheduler("gdm_rt", "G-DM-RT (Algorithm 4 over rooted trees, "
-                              "DMA-RT groups; nested=False = flat fast path)")
+                              "DMA-RT groups; nested=False = flat fast path)",
+                    options=_GDM_RT_OPTS)
 def _gdm_rt(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
             nested: bool = True, decompose: bool = False,
             require_tree: bool = True) -> CompositeSchedule:
@@ -218,27 +277,34 @@ def _gdm_rt(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
 
 
 @register_scheduler("om_alg", "O(m)Alg baseline: one-at-a-time jobs in "
-                              "Algorithm 5 order, BNA per coflow")
+                              "Algorithm 5 order, BNA per coflow",
+                    options=_OM_ALG_OPTS)
 def _om_alg(instance: Instance, *, decompose: bool = False,
-            **_ignored) -> CompositeSchedule:
+            seed: int = 0) -> CompositeSchedule:
+    # `seed` is accepted for registry uniformity (every scheduler can be
+    # planned as plan(inst, name, seed=...)); the baseline is deterministic.
+    del seed
     return om_alg(instance, decompose=decompose)
 
 
-@register_scheduler("gdm_bf", "G-DM + backfilling (§VII); exec=packet|ledger")
+@register_scheduler("gdm_bf", "G-DM + backfilling (§VII); exec=packet|ledger",
+                    options=_GDM_OPTS + ("exec",))
 def _gdm_bf(instance: Instance, *, exec: str = "packet",
             **opts) -> BackfillResult:
     return backfill(_gdm(instance, **opts), exec=exec)
 
 
 @register_scheduler("gdm_rt_bf", "G-DM-RT + backfilling (§VII); "
-                                 "exec=packet|ledger")
+                                 "exec=packet|ledger",
+                    options=_GDM_RT_OPTS + ("exec",))
 def _gdm_rt_bf(instance: Instance, *, exec: str = "packet",
                **opts) -> BackfillResult:
     return backfill(_gdm_rt(instance, **opts), exec=exec)
 
 
 @register_scheduler("om_alg_bf", "O(m)Alg + backfilling (§VII); "
-                                 "exec=packet|ledger")
+                                 "exec=packet|ledger",
+                    options=_OM_ALG_OPTS + ("exec",))
 def _om_alg_bf(instance: Instance, *, exec: str = "packet",
                **opts) -> BackfillResult:
     return backfill(_om_alg(instance, **opts), exec=exec)
@@ -249,8 +315,12 @@ def _om_alg_bf(instance: Instance, *, exec: str = "packet",
 # --------------------------------------------------------------------------
 
 def plan_online(instance: Instance, scheduler: "str | Scheduler",
-                incremental: bool = True, **opts):
-    """Run the §VII-C.2 online protocol with a registered scheduler.
+                incremental: bool = True, driver: str = "session",
+                repair: bool = True, **opts):
+    """Run the §VII-C.2 online protocol with a registered scheduler — a
+    thin, results-identical driver over a :class:`SchedulerSession`
+    (``driver="batch"`` selects the historical closed batch loop, the
+    reference comparator).
 
     incremental=True (default) replans through the engine caches —
     results-identical to a cold run, measurably faster when reschedules
@@ -258,8 +328,9 @@ def plan_online(instance: Instance, scheduler: "str | Scheduler",
     caches for the duration (the from-scratch comparator).
 
     Returns the driver's OnlineResult with `stats` filled in: wall-clock
-    seconds, reschedule count, and per-cache hits/misses/hit-rate deltas
-    attributable to this run.
+    seconds, reschedule count, per-cache hits/misses/hit-rate deltas
+    attributable to this run, and (session driver) the session's
+    repair/replan counters under ``stats["session"]``.
     """
     from .online import simulate_online
 
@@ -272,11 +343,14 @@ def plan_online(instance: Instance, scheduler: "str | Scheduler",
     def _run():
         before = backend.cache_stats()
         t0 = time.perf_counter()
-        res = simulate_online(instance, scheduler)
+        res = simulate_online(instance, scheduler, driver=driver,
+                              repair=repair)
         wall = time.perf_counter() - t0
         after = backend.cache_stats()
         stats: dict = {"wall_s": wall, "reschedules": res.reschedules,
-                       "incremental": incremental}
+                       "incremental": incremental, "driver": driver}
+        if "session" in res.stats:
+            stats["session"] = res.stats["session"]
         for cache in ("bna", "order"):
             hits = after[cache]["hits"] - before[cache]["hits"]
             misses = after[cache]["misses"] - before[cache]["misses"]

@@ -5,9 +5,14 @@ arrival, the scheduler suspends the active plan, updates remaining demands,
 and reschedules everything currently in the system — exactly the paper's
 protocol. Completion times are measured from each job's arrival.
 
-The driver is scheduler-agnostic: it consumes a Transcript (executed
-transmissions) and truncates it at the next arrival with pro-rata flooring
-(integer packets — a partial window never over-counts).
+``simulate_online`` is a thin convenience driver over the stateful
+:class:`~repro.core.session.SchedulerSession` (which owns the residual-
+demand ledger and the cumulative-flooring executor): submit every job, let
+``advance()`` drain the event loop, return the session's result.  The
+historical closed batch loop is retained behind ``driver="batch"`` as the
+reference comparator — the two are results-identical on every scenario x
+scheduler cell (tests/test_session.py pins the full matrix) and the
+``session-equivalence`` CI job pins one online_poisson shape's goldens.
 
 `scheduler` may be a plain callable, an engine Scheduler object, or a
 registered scheduler name (see core/engine.py); engine.plan_online is the
@@ -15,7 +20,6 @@ stats-reporting incremental wrapper around this driver.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Callable
@@ -23,7 +27,8 @@ from typing import Callable
 import numpy as np
 
 from .result import Transcript
-from .types import Coflow, Instance, Job
+from .session import SchedulerSession, execute_transcript, sub_instance
+from .types import Instance, Job
 
 __all__ = ["simulate_online", "OnlineResult"]
 
@@ -35,7 +40,7 @@ class OnlineResult:
     job_completions: dict[int, float]     # absolute wall-clock completion
     instance: Instance
     reschedules: int
-    stats: dict = field(default_factory=dict)  # cache/wall stats (engine)
+    stats: dict = field(default_factory=dict)  # cache/session/wall stats
 
     def twct(self) -> float:
         """Sum of weighted response times (measured from arrival)."""
@@ -63,11 +68,32 @@ def _resolve_scheduler(scheduler, opts: dict | None = None) -> SchedulerFn:
     return scheduler
 
 
-def simulate_online(instance: Instance, scheduler, **opts) -> OnlineResult:
+def simulate_online(instance: Instance, scheduler, driver: str = "session",
+                    repair: bool = True, **opts) -> OnlineResult:
     """Run the rescheduling protocol.  `scheduler` may be a callable, an
     engine Scheduler, or a registered name; with a name, **opts are bound
     through the registry (e.g. ``simulate_online(inst, "gdm_bf",
-    exec="ledger")`` selects the backfill executor for every replan)."""
+    exec="ledger")`` selects the backfill executor for every replan).
+
+    driver="session" (default) drives a SchedulerSession (frontier-append
+    plan repair enabled unless ``repair=False``); driver="batch" runs the
+    historical closed batch loop — the results-identical reference."""
+    if driver not in ("session", "batch"):
+        raise ValueError(f"unknown driver {driver!r}; "
+                         f"choose from ('session', 'batch')")
+    if driver == "batch":
+        return _simulate_online_batch(instance, scheduler, **opts)
+    session = SchedulerSession(instance.m, scheduler, repair=repair, **opts)
+    for j in sorted(instance.jobs, key=lambda j: (j.release, j.jid)):
+        session.submit(j)
+    session.advance()
+    res = session.result()
+    res.instance = instance
+    return res
+
+
+def _simulate_online_batch(instance: Instance, scheduler, **opts) -> OnlineResult:
+    """The historical closed batch loop (reference comparator)."""
     scheduler = _resolve_scheduler(scheduler, opts)
     jobs = sorted(instance.jobs, key=lambda j: (j.release, j.jid))
     remaining: dict[tuple[int, int], np.ndarray] = {
@@ -92,7 +118,7 @@ def simulate_online(instance: Instance, scheduler, **opts) -> OnlineResult:
         while i < len(jobs) and arrivals[i] <= t + 1e-9:
             active.append(jobs[i])
             i += 1
-        sub, cid_maps = _sub_instance(active, remaining, done, instance.m)
+        sub, cid_maps = sub_instance(active, remaining, done, instance.m)
         if not sub.jobs:
             if i < len(jobs):
                 t = arrivals[i]
@@ -102,7 +128,7 @@ def simulate_online(instance: Instance, scheduler, **opts) -> OnlineResult:
         reschedules += 1
         t_next = arrivals[i] if i < len(jobs) else math.inf
         horizon = t_next - t
-        _execute(transcript, horizon, t, cid_maps, remaining, done)
+        execute_transcript(transcript, horizon, t, cid_maps, remaining, done)
         t = t_next if i < len(jobs) else t
 
     job_comp: dict[int, float] = {}
@@ -110,74 +136,3 @@ def simulate_online(instance: Instance, scheduler, **opts) -> OnlineResult:
         cs = [done[(j.jid, c.cid)] for c in j.coflows]
         job_comp[j.jid] = max(cs, default=float(j.release))
     return OnlineResult(job_comp, instance, reschedules)
-
-
-def _sub_instance(
-    active: list[Job],
-    remaining: dict[tuple[int, int], np.ndarray],
-    done: dict[tuple[int, int], float],
-    m: int,
-) -> tuple[Instance, dict[int, list[int]]]:
-    """Remaining-demand instance at a rescheduling point; all jobs present
-    (release 0). cid_maps[jid] maps sub-instance cid -> original cid."""
-    sub_jobs: list[Job] = []
-    cid_maps: dict[int, list[int]] = {}
-    for j in active:
-        keep = [c.cid for c in j.coflows if (j.jid, c.cid) not in done]
-        if not keep:
-            continue
-        idx = {orig: k for k, orig in enumerate(keep)}
-        coflows = [Coflow(j.jid, idx[orig], remaining[(j.jid, orig)]) for orig in keep]
-        edges = [(idx[a], idx[b]) for a, b in j.edges if a in idx and b in idx]
-        sub_jobs.append(Job(j.jid, coflows, edges, weight=j.weight, release=0))
-        cid_maps[j.jid] = keep
-    return Instance(m, sub_jobs), cid_maps
-
-
-def _execute(
-    transcript: Transcript,
-    horizon: float,
-    t0_abs: float,
-    cid_maps: dict[int, list[int]],
-    remaining: dict[tuple[int, int], np.ndarray],
-    done: dict[tuple[int, int], float],
-) -> None:
-    """Apply transcript (local time) up to `horizon`; floor partial windows.
-
-    Flooring is *cumulative* per coflow edge, not per entry: backfilled
-    transcripts split a flow's units fractionally across many windows, and
-    flooring each window independently can yield zero progress forever
-    (0.5 + 0.5 -> 0 + 0), livelocking the reschedule loop.  Accumulating
-    the fractional units and banking integer packets whenever the running
-    total crosses an integer keeps partial windows conservative while
-    guaranteeing progress (the 1e-6 slack absorbs the backfill sweep's
-    conservation tolerance)."""
-    acc: dict[tuple[int, int], np.ndarray] = {}
-    banked: dict[tuple[int, int], np.ndarray] = {}
-    for e in sorted(transcript.entries, key=lambda e: e.t1):
-        if e.units.size == 0:
-            if e.t1 <= horizon + 1e-9:
-                key = (e.jid, cid_maps[e.jid][e.cid])
-                done.setdefault(key, t0_abs + e.t1)
-            continue
-        if e.t0 >= horizon:
-            continue
-        if e.t1 <= horizon + 1e-9:
-            amount = e.units
-            end = e.t1
-        else:
-            frac = (horizon - e.t0) / (e.t1 - e.t0)
-            amount = np.floor(e.units * frac)
-            end = horizon
-        key = (e.jid, cid_maps[e.jid][e.cid])
-        rem = remaining[key]
-        a = acc.setdefault(key, np.zeros_like(rem, dtype=np.float64))
-        t = banked.setdefault(key, np.zeros_like(rem))
-        a[e.srcs, e.dsts] += amount
-        avail = np.floor(a[e.srcs, e.dsts] + 1e-6).astype(np.int64) \
-            - t[e.srcs, e.dsts]
-        take = np.minimum(np.maximum(avail, 0), rem[e.srcs, e.dsts])
-        t[e.srcs, e.dsts] += take
-        rem[e.srcs, e.dsts] -= take
-        if rem.sum() == 0 and key not in done:
-            done[key] = t0_abs + end

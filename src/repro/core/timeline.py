@@ -312,6 +312,85 @@ class FinalSchedule:
                 self.events, self.merged, self.alphas, self.exp, self.m)
         return self.coflow_edges
 
+    # --- expansion splicing (session plan repair) ---------------------------
+    def spliced(self, tau: float, keep: set, cid_remap: dict) -> "FinalSchedule":
+        """The suffix of this expansion from expanded time ``tau`` on,
+        restricted to the coflows in ``keep`` (a set of ``(jid, cid)``) and
+        re-labelled via ``cid_remap`` (``(jid, cid) -> new cid``) — the
+        retained half of the session's frontier-append plan repair.
+
+        Only expansion-free suffixes can be spliced: every kept coflow must
+        lie entirely at or after ``tau`` and every surviving interval must
+        have alpha <= 1 (the suffix is its own packet-level schedule, so the
+        spliced ledger windows stay exact).  The repair path guarantees both
+        by construction; a violation raises ValueError and the caller falls
+        back to a full replan."""
+        led: list[MappedEntry] = []
+        for e in self.ledger:
+            if (e.jid, e.cid) not in keep:
+                continue
+            if e.e0 < tau - 1e-6:
+                raise ValueError("kept coflow starts before the splice point")
+            led.append(MappedEntry(e.jid, cid_remap[(e.jid, e.cid)],
+                                   e.e0 - tau, e.e1 - tau,
+                                   e.srcs, e.dsts, e.units))
+        merged = None
+        events = np.zeros(0, dtype=np.float64)
+        alphas = np.zeros(0, dtype=np.int64)
+        exp = np.zeros(0, dtype=np.float64)
+        if self.merged is not None and self.merged.size:
+            mk = np.array([(int(j), int(c)) in keep
+                           for j, c in zip(self.merged.jid, self.merged.cid)])
+            if mk.any():
+                m_ = self.merged
+                if float(m_.t0[mk].min()) < tau - 1e-6:
+                    raise ValueError("kept merged edge precedes splice point")
+                itau = int(round(tau))
+                cid_new = np.array(
+                    [cid_remap[(int(j), int(c))]
+                     for j, c in zip(m_.jid[mk], m_.cid[mk])], dtype=np.int64)
+                merged = EdgeIntervals(m_.t0[mk] - itau, m_.t1[mk] - itau,
+                                       m_.s[mk], m_.r[mk], m_.owner[mk],
+                                       m_.jid[mk], cid_new)
+                ev = np.unique(np.concatenate([merged.t0, merged.t1]))
+                # numpy oracle directly: a suffix of an expansion-free
+                # schedule stays expansion-free (removing edges cannot raise
+                # an alpha), so this is a cheap self-check, not a dispatch-
+                # worthy kernel call
+                alphas = _alphas_vectorized(ev, merged, self.m)
+                if (alphas > 1).any():
+                    raise ValueError("spliced suffix is not expansion-free")
+                events = ev.astype(np.float64)
+                exp = events.copy()
+        out = FinalSchedule(m=self.m, origin=0, events=events, alphas=alphas,
+                            exp=exp, ledger=led, merged=merged)
+        return out
+
+    @staticmethod
+    def concat_expansion_free(parts: list["FinalSchedule"],
+                              m: int) -> "FinalSchedule":
+        """Merge already-expanded, expansion-free schedules on a shared
+        clock into one (the session's repair path compacts its retained
+        suffix with this, so consecutive frontier appends stay O(parts)=2
+        instead of accumulating one part per repair).  Raises ValueError if
+        the union is not expansion-free — the parts were not actually
+        time-disjoint per port."""
+        ledger = [e for p in parts for e in p.ledger]
+        ms = [p.merged for p in parts if p.merged is not None and p.merged.size]
+        merged = EdgeIntervals.concat(ms) if ms else None
+        events = np.zeros(0, dtype=np.float64)
+        alphas = np.zeros(0, dtype=np.int64)
+        exp = np.zeros(0, dtype=np.float64)
+        if merged is not None:
+            ev = np.unique(np.concatenate([merged.t0, merged.t1]))
+            alphas = _alphas_vectorized(ev, merged, m)
+            if (alphas > 1).any():
+                raise ValueError("concatenated parts are not expansion-free")
+            events = ev.astype(np.float64)
+            exp = events.copy()
+        return FinalSchedule(m=m, origin=0, events=events, alphas=alphas,
+                             exp=exp, ledger=ledger, merged=merged)
+
     # --- nesting ------------------------------------------------------------
     def to_unit(self, uid: int) -> UnitSchedule:
         """Re-package as a UnitSchedule for use at an outer merge level

@@ -13,7 +13,8 @@ Pipeline (benchmarks/planner_ab.py and the dry-run harness drive it):
      becomes one coflow whose demand matrix is the op's traffic pattern
      (ring over the axis its groups span; all-to-all is dense within
      groups); program order within a bucket becomes Starts-After edges.
-  3. `plan(inst)` — run the core engine's G-DM over the instance and
+  3. `plan(inst)` — submit the bucket jobs to a live
+     `repro.core.session.SchedulerSession`, drain it under G-DM, and
      compare with the naive program-order one-at-a-time makespan.
   4. `bucket_order_from_plan(res, leaf_paths)` — translate the planned job
      permutation back into gradient-bucket launch order for
@@ -155,6 +156,7 @@ class PlanOutcome:
     planner_makespan: float
     naive_makespan: float             # program-order one-at-a-time
     schedule: object = None           # the engine PlanResult
+    session: object = None            # the SchedulerSession it was planned on
 
     @property
     def makespan_gain(self) -> float:
@@ -163,17 +165,71 @@ class PlanOutcome:
         return 1.0 - self.planner_makespan / self.naive_makespan
 
 
-def plan(instance: Instance, beta: float = 10.0, seed: int = 0) -> PlanOutcome:
-    """Plan the collective phase with G-DM (engine scheduler "gdm")."""
-    from repro.core.engine import plan as engine_plan
+def plan(instance: Instance, beta: float | None = None,
+         seed: int | None = None, session=None) -> PlanOutcome:
+    """Plan the collective phase with G-DM against a live scheduling session.
 
-    g = engine_plan(instance, "gdm", beta=beta, seed=seed)
+    The step's bucket jobs are submitted to a
+    :class:`repro.core.session.SchedulerSession` (a fresh one per call
+    unless an existing `session` is passed) and the session is drained; the
+    planned permutation and makespan are read from the session's plan.  The
+    returned outcome keeps the session, so callers can keep submitting
+    follow-up phases against the same live fabric state: colliding jids
+    (``coflows_from_step`` numbers every phase 0..n-1) are transparently
+    remapped to session-unique ids and the returned ``order`` is always in
+    the CALLER's jid space, so ``bucket_order_from_plan`` keeps working
+    across phases.  `beta`/`seed` configure the fresh session's scheduler
+    (defaults 10.0 / 0); a shared session's scheduler options are fixed at
+    its creation, so passing them together with `session` raises."""
+    from repro.core.session import SchedulerSession
+
+    if session is None:
+        session = SchedulerSession(instance.m, "gdm",
+                                   beta=10.0 if beta is None else beta,
+                                   seed=0 if seed is None else seed)
+    elif beta is not None or seed is not None:
+        raise ValueError("beta/seed are fixed at session creation; do not "
+                         "pass them together with an existing session")
+    elif session.m != instance.m:
+        raise ValueError(f"session is on {session.m} ports, "
+                         f"instance on {instance.m}")
+    t0 = session.now
+    existing = set(session.snapshot().submitted)
+    next_jid = max(existing | {j.jid for j in instance.jobs}, default=-1) + 1
+    to_caller: dict[int, int] = {}
+    for j in instance.jobs:
+        if j.jid in existing:
+            to_caller[next_jid] = j.jid
+            j = j.remap(next_jid)
+            next_jid += 1
+        else:
+            to_caller[j.jid] = j.jid
+        session.submit(j)
+    session.advance()
+    res = session.result()
+    g = session.last_plan
+    if g is None:
+        raise ValueError("session has no engine plan to read the order from "
+                         "(transcript-only scheduler, or nothing submitted); "
+                         "build the session with a registered scheduler name")
+    # the last replan's Algorithm 5 permutation covers the jobs still in
+    # flight at that point; jobs that drained before an earlier reschedule
+    # (staggered releases) are prepended in completion order so `order` is
+    # always a total permutation of this call's jobs — downstream
+    # bucket_order_from_plan indexes buckets by every position
+    order = [to_caller[jid] for jid in g.schedule.meta["order"]
+             if jid in to_caller]
+    seen = set(order)
+    done_first = sorted((jid for jid in to_caller
+                         if to_caller[jid] not in seen),
+                        key=lambda jid: (res.job_completions[jid], jid))
+    order = [to_caller[jid] for jid in done_first] + order
+    makespan = max(res.job_completions[jid] for jid in to_caller) - t0
     # naive: buckets one at a time in program order; each bucket is a chain
     # of coflows, each taking exactly its effective size (BNA, Lemma 1)
     naive = float(sum(c.D for j in instance.jobs for c in j.coflows))
-    return PlanOutcome(order=list(g.schedule.meta["order"]),
-                       planner_makespan=float(g.makespan),
-                       naive_makespan=naive, schedule=g)
+    return PlanOutcome(order=order, planner_makespan=float(makespan),
+                       naive_makespan=naive, schedule=g, session=session)
 
 
 def bucket_order_from_plan(

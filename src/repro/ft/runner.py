@@ -64,7 +64,8 @@ class StragglerMonitor:
 class TrainRunner:
     def __init__(self, cfg: ArchConfig, opt: OptConfig, data: DataConfig,
                  ft: FTConfig, seed: int = 0,
-                 fault_hook: Callable[[int], None] | None = None):
+                 fault_hook: Callable[[int], None] | None = None,
+                 bucket_order: list[list[str]] | None = None):
         self.cfg = cfg
         self.opt = opt
         self.data = SyntheticTokens(cfg, data)
@@ -74,7 +75,12 @@ class TrainRunner:
         self.monitor = StragglerMonitor(ft.straggler_factor)
         self.ckpt = CheckpointManager(ft.ckpt_dir, every=ft.ckpt_every,
                                       keep=ft.keep, async_write=ft.async_ckpt)
-        self.step_fn = jax.jit(build_train_step(cfg, opt))
+        # bucket_order: the coflow planner's gradient-bucket launch order
+        # (repro.dist.planner.bucket_order_from_plan), realized as HLO
+        # dependency chains in the train step
+        self.bucket_order = bucket_order
+        self.step_fn = jax.jit(
+            build_train_step(cfg, opt, bucket_order=bucket_order))
         self.metrics_log: list[dict] = []
 
     def init_or_resume(self) -> tuple[TrainState, int]:

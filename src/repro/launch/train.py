@@ -5,7 +5,14 @@
 
 --smoke trains the reduced same-family config on CPU (the end-to-end
 driver used by examples/ and the integration tests); full configs are for
-real accelerators (the dry-run proves they lower + fit)."""
+real accelerators (the dry-run proves they lower + fit).
+
+--plan-buckets N wires the coflow planner end-to-end: the model's gradient
+leaves become leaf-size-calibrated all-reduce collectives, bucketed into N
+jobs, planned on a live SchedulerSession (repro.dist.planner.plan), and the
+planned permutation is realized as the train step's gradient-bucket launch
+order (build_train_step(bucket_order=...)) — numerically neutral by
+construction (the ordering barriers only pin collective launch order)."""
 from __future__ import annotations
 
 import argparse
@@ -17,6 +24,36 @@ from repro.configs import get_config
 from repro.data.pipeline import DataConfig
 from repro.ft import FTConfig, TrainRunner
 from repro.train.optim import OptConfig
+
+
+def planned_bucket_order(cfg, n_buckets: int, rows: int = 2, cols: int = 4,
+                         seed: int = 0):
+    """Gradient-bucket launch order from the coflow planner (ROADMAP item:
+    `bucket_order_from_plan` wired into training end-to-end).
+
+    Builds one all-reduce CollectiveOp per gradient leaf (payload = leaf
+    bytes), buckets them into `n_buckets` chained jobs on the rows x cols
+    abstract fabric, plans the phase against a live SchedulerSession, and
+    translates the planned job permutation back into bucket lists of leaf
+    paths for `build_train_step(bucket_order=...)`.
+
+    Returns (bucket_order, PlanOutcome)."""
+    import numpy as np
+
+    from repro.dist.partition import _path_str
+    from repro.dist.planner import (CollectiveOp, bucket_order_from_plan,
+                                    coflows_from_step, plan)
+    from repro.launch.specs import abstract_params
+
+    leaves = jax.tree_util.tree_flatten_with_path(abstract_params(cfg))[0]
+    paths = [_path_str(p) for p, _ in leaves]
+    ops = [CollectiveOp("all-reduce", float(int(np.prod(leaf.shape)) * 4),
+                        i, "data")
+           for i, (_, leaf) in enumerate(leaves)]
+    n_buckets = max(1, min(int(n_buckets), len(ops)))
+    inst = coflows_from_step(ops, rows=rows, cols=cols, n_buckets=n_buckets)
+    outcome = plan(inst, seed=seed)
+    return bucket_order_from_plan(outcome, paths), outcome
 
 
 def main() -> None:
@@ -31,6 +68,10 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-buckets", type=int, default=0,
+                    help="bucket gradients into N jobs and launch their "
+                         "collectives in the coflow planner's order "
+                         "(0 disables)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,6 +79,11 @@ def main() -> None:
         cfg = cfg.smoke()
     if cfg.family != "lm" and not args.smoke:
         raise SystemExit("full-size non-LM training needs accelerators; use --smoke")
+
+    bucket_order, outcome = (None, None)
+    if args.plan_buckets > 0:
+        bucket_order, outcome = planned_bucket_order(
+            cfg, args.plan_buckets, seed=args.seed)
 
     runner = TrainRunner(
         cfg,
@@ -47,15 +93,22 @@ def main() -> None:
                    seed=args.seed),
         FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
         seed=args.seed,
+        bucket_order=bucket_order,
     )
     runner.run(args.steps)
     first = runner.metrics_log[0]["loss"] if runner.metrics_log else float("nan")
     last = runner.metrics_log[-1]["loss"] if runner.metrics_log else float("nan")
-    print(json.dumps({
+    summary = {
         "arch": cfg.name, "steps": len(runner.metrics_log),
         "first_loss": first, "last_loss": last,
         "stragglers": len(runner.monitor.flagged),
-    }))
+    }
+    if outcome is not None:
+        summary["planned_buckets"] = len(outcome.order)
+        summary["bucket_order"] = outcome.order
+        summary["bucket_makespan_gain_pct"] = round(
+            100 * outcome.makespan_gain, 1)
+    print(json.dumps(summary))
 
 
 if __name__ == "__main__":

@@ -4,10 +4,15 @@ Continuous batching over a fixed slot budget: prefill admits requests into
 free slots, decode advances all active slots one token per step. Admission
 ORDER is the paper's contribution applied to serving: outstanding requests
 are modeled as path jobs (prefill coflow -> decode chain; weight = request
-priority, release = arrival) and ordered by the combinatorial Algorithm 5
-(job_order) — weighted-completion-time-optimal admission instead of FIFO.
-The paper's online protocol (§VII-B.2) re-runs the ordering every
-admission tick.
+priority, release = arrival) on a live
+:class:`repro.core.session.SchedulerSession` over an abstract port model of
+the serving interconnect.  Arrival ticks advance the session clock, submit
+the new requests (suspending the active plan, the paper's §VII-C.2 event
+protocol), and read admission order from ``session.frontier()`` — the
+planned-completion order under the live plan — instead of re-running the
+Algorithm 5 ordering from scratch every batch tick.  Ticks without
+arrivals neither replan nor touch the session: they reuse the retained
+frontier at O(1).
 """
 from __future__ import annotations
 
@@ -17,10 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Instance, Job, Coflow, job_order
+from repro.core import Coflow, Job
+from repro.core.session import SchedulerSession
 from repro.models import (ArchConfig, decode_step, init_decode_cache, prefill)
 
 __all__ = ["Request", "ServeConfig", "ServingEngine"]
+
+_PORTS = 8  # abstract port model of the serving interconnect
 
 
 @dataclass
@@ -49,36 +57,70 @@ class ServingEngine:
         self.sc = serve
         self._decode = jax.jit(
             lambda p, c, t: decode_step(cfg, p, c, t))
+        # one scheduling session per run() (reset at entry, so an engine is
+        # reusable across batches and rid numbering may restart): requests
+        # are submitted once on arrival; admission queries the live frontier
+        self._session = SchedulerSession(_PORTS, "om_alg")
+        self._submitted: set[int] = set()
+        self._frontier = None
 
     # --- admission ordering (the paper's machinery) ----------------------
-    def _admission_order(self, pending: list[Request]) -> list[Request]:
+    def _request_job(self, r: Request) -> Job:
+        # prefill coflow: prompt bytes spread from the weight ports;
+        # decode chain: one small coflow per new token (collapsed to one
+        # aggregate coflow to keep ordering O(n))
+        m = _PORTS
+        d1 = np.zeros((m, m), dtype=np.int64)
+        d1[r.rid % m, (r.rid + 1) % m] = max(len(r.tokens), 1)
+        d2 = np.zeros((m, m), dtype=np.int64)
+        d2[r.rid % m, (r.rid + 1) % m] = max(r.max_new, 1)
+        return Job(r.rid, [Coflow(r.rid, 0, d1), Coflow(r.rid, 1, d2)],
+                   [(0, 1)], weight=r.weight, release=int(r.arrival))
+
+    def _admission_order(self, pending: list[Request],
+                         step: int = 0) -> list[Request]:
         if self.sc.admission == "fifo" or len(pending) <= 1:
             return sorted(pending, key=lambda r: (r.arrival, r.rid))
-        m = 8  # abstract port model of the serving interconnect
-        jobs = []
-        for i, r in enumerate(pending):
-            # prefill coflow: prompt bytes spread from the weight ports;
-            # decode chain: one small coflow per new token (collapsed to one
-            # aggregate coflow to keep ordering O(n))
-            d1 = np.zeros((m, m), dtype=np.int64)
-            d1[i % m, (i + 1) % m] = max(len(r.tokens), 1)
-            d2 = np.zeros((m, m), dtype=np.int64)
-            d2[i % m, (i + 1) % m] = max(r.max_new, 1)
-            jobs.append(Job(i, [Coflow(i, 0, d1), Coflow(i, 1, d2)],
-                            [(0, 1)], weight=r.weight, release=int(r.arrival)))
-        order = job_order(Instance(m, jobs)).order
-        return [pending[i] for i in order]
+        # only requests that have ARRIVED enter the session (so the session
+        # never holds future releases and every submitted job shows a finite
+        # planned completion); un-arrived requests sort last until their
+        # tick, and duplicate rids share one session job (first wins)
+        due = []
+        for r in pending:
+            if r.rid not in self._submitted and r.arrival <= step:
+                self._submitted.add(r.rid)
+                due.append(r)
+        if due:
+            # only arrival ticks touch the session: advance the fabric clock
+            # to the tick, submit, and let frontier() replan once; planned
+            # completions are static within an epoch, so no-arrival ticks
+            # reuse the previous frontier at O(1)
+            if step > self._session.now:
+                self._session.advance(until=step)
+            for r in due:
+                self._session.submit(self._request_job(r))
+            self._frontier = self._session.frontier()
+        f = self._frontier
+        if f is None:   # nothing has arrived yet
+            return sorted(pending, key=lambda r: (r.arrival, r.rid))
+        return sorted(pending,
+                      key=lambda r: (f.completion(r.rid), r.arrival, r.rid))
 
     # --- serving loop -----------------------------------------------------
     def run(self, requests: list[Request], max_steps: int = 10_000) -> dict:
+        self._session = SchedulerSession(_PORTS, "om_alg")
+        self._submitted = set()
+        self._frontier = None
         pending = list(requests)
         active: list[tuple[Request, dict]] = []
         step = 0
         while (pending or active) and step < max_steps:
-            # admit into free slots (re-ordered every tick, per the paper's
-            # online protocol)
-            pending = self._admission_order(pending)
-            while pending and len(active) < self.sc.slots:
+            # admit ARRIVED requests into free slots (ordered by the live
+            # session frontier; only ticks with new arrivals replan, per
+            # §VII-C.2) — a request cannot be served before its arrival
+            pending = self._admission_order(pending, step)
+            while pending and len(active) < self.sc.slots \
+                    and pending[0].arrival <= step:
                 r = pending.pop(0)
                 toks = jnp.asarray(r.tokens, jnp.int32)[None, :]
                 logits, cache = prefill(self.cfg, self.params, toks)

@@ -96,11 +96,31 @@ def test_serving_engine_fifo_vs_coflow():
                         max_new=4, weight=float(1 + (i % 3)), arrival=0.0)
                 for i in range(6)]
 
+    # non-zero arrivals must still get the weighted (Algorithm 5 / session)
+    # ordering once they arrive — not the FIFO (arrival, rid) fallback: the
+    # light high-priority request admits before the heavy low-priority one
+    # that has a smaller rid
+    eng = ServingEngine(cfg, params, ServeConfig(slots=2, capacity=32,
+                                                 admission="coflow"))
+    heavy = Request(rid=1, tokens=rng.integers(1, cfg.vocab, size=18),
+                    max_new=12, weight=0.1, arrival=1.0)
+    light = Request(rid=2, tokens=rng.integers(1, cfg.vocab, size=3),
+                    max_new=2, weight=100.0, arrival=1.0)
+    order = eng._admission_order([heavy, light], step=1)
+    assert [r.rid for r in order] == [2, 1]
+    # duplicate rids in one batch share a session job instead of crashing
+    dup = Request(rid=2, tokens=rng.integers(1, cfg.vocab, size=3),
+                  max_new=2, weight=100.0, arrival=1.0)
+    assert len(eng._admission_order([light, dup], step=2)) == 2
+
     out = {}
     for mode in ("coflow", "fifo"):
         eng = ServingEngine(cfg, params, ServeConfig(slots=2, capacity=32,
                                                      admission=mode))
         out[mode] = eng.run(reqs())
         assert out[mode]["completed"] == 6
+        # engines are reusable: a second batch with restarted rids gets a
+        # fresh scheduling session instead of duplicate-jid errors
+        assert eng.run(reqs())["completed"] == 6
     # both complete; admission ordering is exercised (values may differ)
     assert out["coflow"]["steps"] > 0

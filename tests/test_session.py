@@ -1,0 +1,417 @@
+"""The event-driven SchedulerSession (core/session.py).
+
+* session-vs-batch driver equivalence on the full 9-scenario x 6-scheduler
+  matrix: identical job_completions (bit-identical floats), twct, and
+  reschedule counts — offline scenarios get Poisson releases injected so
+  the equivalence is exercised on genuinely online traces;
+* frontier-append plan repair: the fast path fires on clean-cut arrivals,
+  chains across consecutive appends, is results-identical to the full
+  replan (and to the batch reference), and correctly REJECTS mid-window
+  arrivals;
+* the event API itself: submit/advance/frontier/snapshot/result semantics;
+* scheduler option validation (`make_scheduler` rejects typos with the
+  valid option list — the silent `**_ignored`/`**opts` swallowing is gone);
+* a pinned golden for one online_poisson shape under BOTH drivers (the
+  `session-equivalence` CI job runs this file).
+"""
+import json
+import math
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import (Coflow, Instance, Job, SchedulerSession,
+                        available_schedulers, make_scheduler, plan_online,
+                        poisson_releases, scheduler_options, simulate_online,
+                        theta0)
+
+SCHEDULERS = sorted(available_schedulers())
+GOLDEN_PATH = Path(__file__).parent / "goldens" / "session_equivalence.json"
+
+# tiny per-scenario sizes (mirrors tests/test_scenarios.py): the doubled
+# 9 x 6 online matrix must stay CI-cheap
+TINY = {
+    "fb_like": dict(m=6, scale=0.03),
+    "fb_like_rt": dict(m=6, scale=0.03),
+    "alibaba_sparse": dict(m=6, scale=0.15),
+    "incast": dict(m=6, scale=0.1),
+    "shuffle_heavy": dict(m=6, scale=0.2),
+    "wide_shallow": dict(m=6, scale=0.2),
+    "deep_chain": dict(m=6, scale=0.25),
+    "online_poisson": dict(m=6, scale=0.03),
+    "dist_collectives": dict(m=8, scale=0.5),
+}
+
+
+def _online_instance(name: str):
+    """The scenario's instance with releases: native for poisson scenarios,
+    Poisson-injected for offline ones (so every cell really reschedules)."""
+    built = scenarios.build(name, seed=0, **TINY[name])
+    inst = built.instance
+    if built.meta.arrival == "offline":
+        inst = poisson_releases(inst, theta=2 * theta0(inst), seed=0)
+    return inst, built.meta
+
+
+# --- session-vs-batch equivalence: the full matrix ---------------------------
+
+@pytest.mark.parametrize("sched", SCHEDULERS)
+@pytest.mark.parametrize("scen", scenarios.names())
+def test_matrix_session_batch_equivalence(scen, sched):
+    inst, meta = _online_instance(scen)
+    opts = scenarios.scheduler_opts(sched, meta)
+    a = simulate_online(inst, sched, driver="batch", seed=0, **opts)
+    b = simulate_online(inst, sched, driver="session", seed=0, **opts)
+    assert a.job_completions == b.job_completions, \
+        f"{scen}/{sched}: drivers diverged"
+    assert a.twct() == b.twct()
+    assert a.reschedules == b.reschedules
+    s = b.stats["session"]
+    assert s["reschedules"] == b.reschedules
+    assert s["repairs"] + s["full_replans"] == s["reschedules"]
+
+
+def test_unknown_driver_rejected():
+    inst, _ = _online_instance("fb_like")
+    with pytest.raises(ValueError):
+        simulate_online(inst, "gdm", driver="batch_v2")
+
+
+def test_plan_online_session_and_batch_drivers_agree():
+    inst, _ = _online_instance("online_poisson")
+    a = plan_online(inst, "gdm", seed=0, driver="session")
+    b = plan_online(inst, "gdm", seed=0, driver="batch")
+    assert a.twct() == b.twct()
+    assert a.job_completions == b.job_completions
+    assert "session" in a.stats and "session" not in b.stats
+    assert a.stats["driver"] == "session"
+
+
+# --- frontier-append plan repair ---------------------------------------------
+
+def _append_workload(m=6, appends=3):
+    """Two base jobs at t=0 plus `appends` arrivals landing exactly on the
+    clean cuts of the O(m)Alg sequential schedule, sized/weighted so
+    Algorithm 5 appends each new job at the tail — the repair fast path
+    fires (and chains) on every arrival.
+
+    om_alg order on the base pair is [1, 0] (job1 [0,8), job0 [8,20)); the
+    first append lands at t=8, each later one when the job planned before
+    it finishes."""
+    jobs = []
+    d0 = np.zeros((m, m), np.int64)
+    d0[0, 1] = 12
+    d1 = np.zeros((m, m), np.int64)
+    d1[2, 3] = 8
+    jobs.append(Job(0, [Coflow(0, 0, d0)], [], weight=1.0, release=0))
+    jobs.append(Job(1, [Coflow(1, 0, d1)], [], weight=1.0, release=0))
+    t, size, w, prev = 8, 20, 0.4, 12
+    for a in range(appends):
+        jid = 2 + a
+        d = np.zeros((m, m), np.int64)
+        d[(a % 3) * 2, (a % 3) * 2 + 1] = size
+        jobs.append(Job(jid, [Coflow(jid, 0, d)], [], weight=w, release=t))
+        t += prev
+        prev, size, w = size, size + 4, w / 2
+    return Instance(m, jobs)
+
+
+def test_frontier_append_repair_fires_and_matches_full_replan():
+    inst = _append_workload()
+    on = simulate_online(inst, "om_alg", driver="session")
+    off = simulate_online(inst, "om_alg", driver="session", repair=False)
+    bat = simulate_online(inst, "om_alg", driver="batch")
+    s_on, s_off = on.stats["session"], off.stats["session"]
+    # the fast path fires on every append and chains across repaired epochs
+    assert s_on["repairs"] == 3 and s_on["repair_rejects"] == 0
+    assert s_on["full_replans"] == 1
+    assert s_on["repair_hit_rate"] == pytest.approx(0.75)
+    assert s_off["repairs"] == 0 and s_off["full_replans"] == 4
+    # and it is results-identical to the full replan and the batch reference
+    assert on.job_completions == off.job_completions == bat.job_completions
+    assert on.twct() == off.twct() == bat.twct()
+    assert on.reschedules == off.reschedules == bat.reschedules == 4
+
+
+def test_repair_rejects_mid_window_arrival():
+    """An arrival that interrupts a coflow mid-window leaves it partially
+    executed — the soundness checks must reject the splice and fall back,
+    and the fallback must still match the batch reference."""
+    inst = _append_workload(appends=1)
+    # shift the append off the clean cut, into job0's window
+    import dataclasses
+    jobs = [dataclasses.replace(j, release=13) if j.jid == 2 else j
+            for j in inst.jobs]
+    inst = Instance(inst.m, jobs)
+    on = simulate_online(inst, "om_alg", driver="session")
+    bat = simulate_online(inst, "om_alg", driver="batch")
+    s = on.stats["session"]
+    assert s["repairs"] == 0 and s["repair_rejects"] >= 1
+    assert on.job_completions == bat.job_completions
+
+
+def test_repair_never_fires_for_interleaving_schedulers():
+    """G-DM groups re-derive random delays per plan; the repair path must
+    not pretend to splice them (it is only certified for the job-sequential
+    baseline)."""
+    inst = _append_workload()
+    on = simulate_online(inst, "gdm", driver="session", seed=0)
+    bat = simulate_online(inst, "gdm", driver="batch", seed=0)
+    assert on.stats["session"]["repairs"] == 0
+    assert on.job_completions == bat.job_completions
+
+
+# --- the event API -----------------------------------------------------------
+
+def _two_jobs(m=4):
+    d0 = np.zeros((m, m), np.int64)
+    d0[0, 1] = 6
+    d1 = np.zeros((m, m), np.int64)
+    d1[2, 3] = 4
+    return (Job(0, [Coflow(0, 0, d0)], [], weight=1.0, release=0),
+            Job(1, [Coflow(1, 0, d1)], [], weight=1.0, release=5))
+
+
+def test_session_event_loop_submit_advance_result():
+    j0, j1 = _two_jobs()
+    s = SchedulerSession(4, "om_alg")
+    s.submit(j0)
+    s.submit(j1)         # future release: admitted when advance reaches it
+    assert not s.done
+    with pytest.raises(RuntimeError):
+        s.result()       # not drained yet
+    s.advance()
+    assert s.done
+    res = s.result()
+    ref = simulate_online(Instance(4, [j0, j1]), "om_alg", driver="batch")
+    assert res.job_completions == ref.job_completions
+    assert res.reschedules == ref.reschedules
+    assert s.now == pytest.approx(res.makespan)
+
+
+def test_session_incremental_advance_matches_one_shot():
+    """Advancing in arrival-aligned steps is the batch protocol; the final
+    state matches a single drain."""
+    j0, j1 = _two_jobs()
+    a = SchedulerSession(4, "om_alg")
+    for j in (j0, j1):
+        a.submit(j)
+    a.advance(until=5.0)   # executes epoch 1 up to the arrival
+    assert a.now == 5.0
+    snap = a.snapshot()
+    assert snap.remaining_total() < 10   # work was executed
+    a.advance()
+    b = SchedulerSession(4, "om_alg")
+    for j in (j0, j1):
+        b.submit(j)
+    b.advance()
+    assert a.result().job_completions == b.result().job_completions
+
+
+def test_session_prunes_drained_jobs_from_active_set():
+    """Long-lived sessions (serve keeps one per batch stream) must not scan
+    every job ever submitted: drained jobs retire from the active set and
+    land in frontier().finished."""
+    j0, j1 = _two_jobs()
+    s = SchedulerSession(4, "om_alg")
+    s.submit(j0)
+    s.submit(j1)
+    s.advance()
+    assert s.snapshot().active == ()
+    f = s.frontier()
+    assert set(f.finished) == {0, 1} and f.completions == {}
+    # a fresh arrival after the prune still plans and drains normally
+    d = np.zeros((4, 4), np.int64)
+    d[1, 2] = 3
+    s.submit(Job(2, [Coflow(2, 0, d)], [], weight=1.0, release=0))
+    s.advance()
+    assert set(s.frontier().finished) == {0, 1, 2}
+    assert len(s.result().job_completions) == 3
+
+
+def test_planner_shared_session_multi_phase():
+    """The advertised follow-up-phase flow: coflows_from_step numbers every
+    phase 0..n-1, so a shared session must remap colliding jids internally
+    and still hand back the order in the caller's jid space — downstream
+    bucket_order_from_plan keeps working."""
+    from repro.dist.planner import (bucket_order_from_plan, coflows_from_step,
+                                    plan as dist_plan,
+                                    synthetic_collective_ops)
+
+    inst = coflows_from_step(synthetic_collective_ops(n_ops=4, seed=0),
+                             rows=2, cols=2, n_buckets=2)
+    out = dist_plan(inst)
+    with pytest.raises(ValueError):
+        dist_plan(inst, beta=5.0, session=out.session)  # opts fixed at creation
+    # phase 2: identical jid numbering on the SAME session
+    inst2 = coflows_from_step(synthetic_collective_ops(n_ops=4, seed=1),
+                              rows=2, cols=2, n_buckets=2)
+    again = dist_plan(inst2, session=out.session)
+    assert sorted(again.order) == [0, 1]                # caller jid space
+    paths = [f"p{i}" for i in range(6)]
+    buckets = bucket_order_from_plan(again, paths)
+    assert sorted(x for b in buckets for x in b) == paths
+    assert again.session is out.session and again.session.done
+
+
+def test_planner_order_total_despite_early_drain():
+    """A job that drains before a later reschedule is missing from the last
+    plan's Algorithm 5 permutation — plan() must still return a total
+    permutation (prepending drained jobs in completion order) so
+    bucket_order_from_plan can index every bucket."""
+    from repro.dist.planner import bucket_order_from_plan, plan as dist_plan
+
+    m = 4
+    d0 = np.zeros((m, m), np.int64)
+    d0[0, 1] = 4
+    d1 = np.zeros((m, m), np.int64)
+    d1[2, 3] = 6
+    inst = Instance(m, [Job(0, [Coflow(0, 0, d0)], [], weight=1.0, release=0),
+                        Job(1, [Coflow(1, 0, d1)], [], weight=1.0,
+                            release=100)])
+    out = dist_plan(inst)
+    assert sorted(out.order) == [0, 1]
+    buckets = bucket_order_from_plan(out, ["a", "b", "c", "d"])
+    assert sorted(x for b in buckets for x in b) == ["a", "b", "c", "d"]
+
+
+def test_planner_rejects_plan_less_session():
+    from repro.core import om_alg
+    from repro.dist.planner import plan as dist_plan
+
+    s = SchedulerSession(4, lambda sub: om_alg(sub).transcript())
+    d = np.zeros((4, 4), np.int64)
+    d[0, 1] = 2
+    inst = Instance(4, [Job(0, [Coflow(0, 0, d)], [], weight=1.0, release=0)])
+    with pytest.raises(ValueError, match="no engine plan"):
+        dist_plan(inst, session=s)
+
+
+def test_session_retires_coflowless_jobs():
+    s = SchedulerSession(4, "om_alg")
+    s.submit(Job(0, [], [], weight=1.0, release=3))
+    s.advance()
+    assert s.snapshot().active == ()
+    assert s.frontier().completion(0) == 3.0
+    assert s.result().job_completions[0] == 3.0
+
+
+def test_session_frontier_reports_planned_completions():
+    j0, j1 = _two_jobs()
+    s = SchedulerSession(4, "om_alg")
+    s.submit(j0)
+    f = s.frontier()
+    assert f.now == 0.0
+    assert f.completions[0] == pytest.approx(6.0)   # planned, not executed
+    assert f.busy_until == pytest.approx(6.0)
+    assert f.pending == ()
+    s.submit(j1)
+    assert s.frontier().pending == (1,)
+    s.advance()
+    f = s.frontier()
+    assert f.completions == {}
+    assert f.finished[0] == pytest.approx(6.0)
+    assert f.order()[0] == 0
+    assert f.completion(99) == math.inf
+
+
+def test_session_rejects_duplicate_and_mismatched_jobs():
+    j0, _ = _two_jobs()
+    s = SchedulerSession(4, "om_alg")
+    s.submit(j0)
+    with pytest.raises(ValueError):
+        s.submit(j0)
+    with pytest.raises(ValueError):
+        s.advance(until=-1.0)
+    d = np.zeros((6, 6), np.int64)
+    d[0, 1] = 1
+    with pytest.raises(ValueError):
+        s.submit(Job(7, [Coflow(7, 0, d)], []))
+
+
+def test_session_backfilled_plan_entry():
+    j0, j1 = _two_jobs()
+    s = SchedulerSession(4, "om_alg")
+    s.submit(j0)
+    s.submit(j1)
+    bf = s.backfilled_plan()            # current epoch: job 0 alone
+    assert bf.executor == "packet"
+    assert bf.job_completions[0] == pytest.approx(6.0)
+    idle = SchedulerSession(4, "om_alg")
+    with pytest.raises(ValueError):
+        idle.backfilled_plan()
+
+
+def test_session_accepts_plain_callables():
+    from repro.core import om_alg
+
+    j0, j1 = _two_jobs()
+    inst = Instance(4, [j0, j1])
+    res = simulate_online(inst, lambda sub: om_alg(sub).transcript(),
+                          driver="session")
+    ref = simulate_online(inst, lambda sub: om_alg(sub).transcript(),
+                          driver="batch")
+    assert res.job_completions == ref.job_completions
+
+
+# --- option validation (no more silent swallowing) ---------------------------
+
+def test_make_scheduler_rejects_unknown_options():
+    with pytest.raises(TypeError) as ei:
+        make_scheduler("om_alg", execc="ledger")   # the ISSUE's typo
+    msg = str(ei.value)
+    assert "execc" in msg and "valid options" in msg and "decompose" in msg
+    # exec is a *_bf option only; om_alg's old **_ignored swallowed it
+    with pytest.raises(TypeError):
+        make_scheduler("om_alg", exec="ledger")
+    with pytest.raises(TypeError):
+        make_scheduler("gdm", require_tree=False)  # gdm_rt-only option
+    # valid spellings still bind
+    assert make_scheduler("om_alg_bf", exec="ledger").opts == {"exec": "ledger"}
+    assert make_scheduler("gdm_rt", require_tree=False).opts == \
+        {"require_tree": False}
+
+
+def test_option_validation_reaches_online_and_session_paths():
+    inst, _ = _online_instance("fb_like")
+    with pytest.raises(TypeError):
+        simulate_online(inst, "gdm_bf", excc="ledger")
+    with pytest.raises(TypeError):
+        SchedulerSession(inst.m, "gdm", beta2=3.0)
+    with pytest.raises(TypeError):
+        plan_online(inst, "gdm", sseed=1)
+
+
+def test_scheduler_options_listing():
+    opts = scheduler_options("gdm_rt_bf")
+    assert "exec" in opts and "require_tree" in opts and "beta" in opts
+    with pytest.raises(KeyError):
+        scheduler_options("nope")
+
+
+# --- pinned golden: one online_poisson shape under both drivers --------------
+
+def test_session_equivalence_online_poisson_golden():
+    """The `session-equivalence` CI job pins this shape: both drivers must
+    produce the same completions AND match the checked-in golden (refresh
+    intentionally with REPRO_UPDATE_GOLDENS=1)."""
+    built = scenarios.build("online_poisson", m=6, seed=0, scale=0.03)
+    rows = {}
+    for driver in ("batch", "session"):
+        r = simulate_online(built.instance, "gdm", driver=driver, seed=0)
+        rows[driver] = {
+            "twct": r.twct(),
+            "reschedules": r.reschedules,
+            "job_completions": {str(k): v for k, v in
+                                sorted(r.job_completions.items())},
+        }
+    assert rows["batch"] == rows["session"]
+    if os.environ.get("REPRO_UPDATE_GOLDENS"):
+        GOLDEN_PATH.parent.mkdir(exist_ok=True)
+        GOLDEN_PATH.write_text(
+            json.dumps(rows["session"], indent=1, sort_keys=True) + "\n")
+    want = json.loads(GOLDEN_PATH.read_text())
+    assert rows["session"] == want
