@@ -1,7 +1,11 @@
 """§Roofline report: renders benchmarks/results/dryrun.json into the
 per-(arch x shape x mesh) three-term table, computes MODEL_FLOPS (analytic
 6*N*D / 2*N_active*D + attention terms) and the useful-compute ratio
-MODEL_FLOPS / HLO_FLOPs, and names the dominant bottleneck."""
+MODEL_FLOPS / HLO_FLOPs, and names the dominant bottleneck.
+
+Also carries the analytic TPU roofline for the ``bna_step`` matching kernel
+(`bna_batch_roofline`): per-step bytes/flops at batch sizes K -> 1e5,
+independent of dryrun.json."""
 from __future__ import annotations
 
 import json
@@ -99,6 +103,27 @@ def model_flops_per_chip(cfg: ArchConfig, shape_name: str, chips: int) -> float:
         base = 2 * active * tokens
         attn = n_attn * 4 * B * S * hq * dh
     return (base + attn) / chips
+
+
+def bna_batch_roofline(Ks=(1_000, 10_000, 100_000), w: int = 16) -> None:
+    """Analytic TPU three-term roofline for one `bna_step` kernel call at
+    batch size K over width-w matrices (int32 tiles, lanes padded to 128).
+
+    Per matrix and step the kernel streams the (w, w) demand tile in and
+    out, plus the (w,)-state rows (row/col/match in, row/col/piece/invalid
+    out) and the D/t scalars; the arithmetic is ~6 VPU ops per demand
+    element (one-hot compare, masked sum, subtract, three masked mins
+    amortized).  Intensity ~3 ops/byte: memory-bound like coflow_merge —
+    which is the design point, the kernel exists so the step's HBM pass is
+    amortized across the whole batch instead of K separate scalar walks."""
+    w_pad = ((w + 127) // 128) * 128
+    for K in Ks:
+        bytes_ = K * (2 * w * w_pad + 7 * w_pad + 4) * 4
+        flops = K * (6 * w * w_pad + 10 * w_pad)
+        t_c, t_m = flops / PEAK_FLOPS, bytes_ / HBM_BW
+        emit(f"roofline_bna_step_K{K}", 0.0,
+             f"tpu_compute_s={t_c:.2e};tpu_memory_s={t_m:.2e};"
+             f"bound={'compute' if t_c > t_m else 'memory'};w={w}")
 
 
 def render(dryrun_path: Path | None = None) -> list[dict]:

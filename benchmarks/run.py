@@ -27,7 +27,7 @@ def main() -> None:
                     help="published workload scale (longest)")
     ap.add_argument("--only", default=None,
                     help="comma list: figs,online,beta,rsd,planner,kernels,"
-                         "roofline,scenarios")
+                         "bna_batch,roofline,scenarios")
     ap.add_argument("--scenario", default=None,
                     help="comma list of scenario-registry keys for the "
                          "scenario x scheduler matrix (default: all "
@@ -36,6 +36,10 @@ def main() -> None:
                     choices=("auto", "numpy", "pallas"),
                     help="route merge_and_fix alphas through this backend "
                          "(default: REPRO_ALPHA_BACKEND or auto)")
+    ap.add_argument("--bna-backend", default=None,
+                    choices=("auto", "numpy", "pallas"),
+                    help="route the batched BNA step through this backend "
+                         "(default: REPRO_BNA_BACKEND or auto)")
     ap.add_argument("--backfill-exec", default="packet",
                     choices=("packet", "ledger"),
                     help="backfill executor for the *_bf schedulers in the "
@@ -54,6 +58,9 @@ def main() -> None:
     if args.alpha_backend:
         from repro.core import set_alpha_backend
         set_alpha_backend(args.alpha_backend)
+    if args.bna_backend:
+        from repro.core import set_bna_backend
+        set_bna_backend(args.bna_backend)
 
     if args.fast:
         scale, seeds, ms, mus, factors = 0.12, 2, (10, 30, 50), (2, 5, 10), (2, 25)
@@ -99,8 +106,11 @@ def main() -> None:
     if "planner" in want:
         planner_ab.run()
     if "kernels" in want:
-        kernels_bench.run()
+        kernels_bench.run(fast=args.fast)
+    elif "bna_batch" in want:
+        kernels_bench.run_bna_batch(fast=args.fast)
     if "roofline" in want:
+        roofline_report.bna_batch_roofline()
         try:
             roofline_report.render()
         except FileNotFoundError:

@@ -3,12 +3,14 @@ contribution, implemented faithfully: BNA, DMA, DMA-SRT, DMA-RT, the
 primal-dual job ordering, G-DM / G-DM-RT, the O(m)Alg baseline, backfilling,
 the online driver, and the paper's workload/verification machinery."""
 
-from .backend import (cache_stats, clear_caches, compute_alphas,
-                      set_alpha_backend, use_alpha_backend)
+from .backend import (bna_pieces_many, cache_stats, clear_caches,
+                      compute_alphas, prefetch_bna, set_alpha_backend,
+                      set_bna_backend, use_alpha_backend, use_bna_backend)
 from .backfill import BackfillResult, backfill
 from .baseline import om_alg
 from .bna import bna, verify_bna_schedule
 from .dma import cached_bna, dma, isolated_job_unit
+from .matching import bna_many
 from .dma_srt import dma_rt, dma_srt, path_subjobs, srt_start_times
 from .engine import (PlanResult, Scheduler, available_schedulers,
                      make_scheduler, plan, plan_online, register_scheduler,

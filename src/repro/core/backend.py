@@ -12,11 +12,27 @@ variables, selects how the engine's two hot paths execute:
   Any kernel failure falls back to the numpy oracle (warned once) — the two
   are bit-identical, so the fallback is safe.
 
-* **BNA cache** — a bounded LRU keyed on ``demand.tobytes()`` memoizing BNA
-  decompositions (Algorithm 1).  Unlike the old per-``Coflow``-object memo,
-  the bytes key survives the online driver's ``_sub_instance`` rebuilding
-  fresh ``Coflow`` objects on every arrival, so untouched coflows hit across
-  reschedules.  Hit/miss counters feed the benchmark report.
+* **BNA backend** — the batched matching layer (``core/matching.py``,
+  ``bna_many``) vectorizes the multi-coflow BNA decomposition and
+  dispatches its inner step per ``REPRO_BNA_BACKEND``: ``"numpy"`` runs the
+  in-place vectorized step, ``"pallas"`` routes the same integer arithmetic
+  through the ``kernels/bna_step`` kernel (interpret mode on CPU, compiled
+  on TPU), ``"auto"`` picks pallas iff a TPU backend is attached.  The two
+  are bit-identical, so the auto fallback on kernel failure is safe (an
+  explicitly requested pallas backend propagates the error, mirroring the
+  alpha backend).
+
+* **BNA cache** — a bounded LRU keyed on ``(shape, dtype, bytes)`` of the
+  demand, memoizing BNA decompositions (Algorithm 1).  Unlike the old
+  per-``Coflow``-object memo, the content key survives the online driver's
+  ``_sub_instance`` rebuilding fresh ``Coflow`` objects on every arrival,
+  so untouched coflows hit across reschedules; including shape and dtype
+  keeps differently-typed or differently-shaped demands from colliding.
+  :func:`bna_pieces_many` is the batch entry: it consults the LRU first and
+  hands ONLY the misses to ``bna_many`` in one batched call — this is what
+  the engine's instance-level prefetch (``engine.plan`` /
+  ``SchedulerSession``) goes through.  Hit/miss counters (scalar and
+  per-batch) feed the benchmark report.
 
 * **order cache** — a bounded LRU over the exact scheduling state (port
   count, and per job: id, weight, release, DAG edges, demand bytes)
@@ -28,6 +44,9 @@ variables, selects how the engine's two hot paths execute:
 Environment switches (read once at import; also settable in-process)::
 
     REPRO_ALPHA_BACKEND    auto | numpy | pallas      (default: auto)
+    REPRO_BNA_BACKEND      auto | numpy | pallas      (default: auto)
+    REPRO_BNA_BATCH        1 | 0: instance-level batched BNA prefetch
+                           (default: 1)
     REPRO_BNA_CACHE_SIZE   max cached decompositions  (default: 4096; 0 off)
     REPRO_ORDER_CACHE_SIZE max cached job orders      (default: 256;  0 off)
 """
@@ -38,6 +57,7 @@ import warnings
 from collections import OrderedDict
 from contextlib import contextmanager
 from dataclasses import dataclass
+from typing import Iterable
 
 import numpy as np
 
@@ -47,14 +67,20 @@ __all__ = [
     "set_alpha_backend",
     "use_alpha_backend",
     "resolve_alpha_backend",
+    "set_bna_backend",
+    "use_bna_backend",
+    "resolve_bna_backend",
     "compute_alphas",
     "bna_pieces",
+    "bna_pieces_many",
+    "prefetch_bna",
     "cache_stats",
     "clear_caches",
     "no_caches",
 ]
 
 _ALPHA_BACKENDS = ("auto", "numpy", "pallas")
+_BNA_BACKENDS = ("auto", "numpy", "pallas")
 
 
 @dataclass
@@ -62,6 +88,8 @@ class BackendConfig:
     """Process-wide engine knobs (env-initialized, mutable in-process)."""
 
     alpha_backend: str = "auto"
+    bna_backend: str = "auto"
+    bna_batch: bool = True
     bna_cache_size: int = 4096
     order_cache_size: int = 256
 
@@ -69,6 +97,8 @@ class BackendConfig:
     def from_env() -> "BackendConfig":
         cfg = BackendConfig(
             alpha_backend=os.environ.get("REPRO_ALPHA_BACKEND", "auto").lower(),
+            bna_backend=os.environ.get("REPRO_BNA_BACKEND", "auto").lower(),
+            bna_batch=os.environ.get("REPRO_BNA_BATCH", "1") != "0",
             bna_cache_size=int(os.environ.get("REPRO_BNA_CACHE_SIZE", "4096")),
             order_cache_size=int(os.environ.get("REPRO_ORDER_CACHE_SIZE", "256")),
         )
@@ -76,6 +106,10 @@ class BackendConfig:
             raise ValueError(
                 f"REPRO_ALPHA_BACKEND={cfg.alpha_backend!r}; "
                 f"expected one of {_ALPHA_BACKENDS}")
+        if cfg.bna_backend not in _BNA_BACKENDS:
+            raise ValueError(
+                f"REPRO_BNA_BACKEND={cfg.bna_backend!r}; "
+                f"expected one of {_BNA_BACKENDS}")
         return cfg
 
 
@@ -100,16 +134,45 @@ def use_alpha_backend(name: str):
         config.alpha_backend = prev
 
 
+def _resolve_auto() -> str:
+    try:
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "numpy"
+    except Exception:  # jax unavailable / misconfigured
+        return "numpy"
+
+
 def resolve_alpha_backend(force: str | None = None) -> str:
     """Concrete backend for this call: explicit override > config > auto."""
     name = force or config.alpha_backend
-    if name == "auto":
-        try:
-            import jax
-            return "pallas" if jax.default_backend() == "tpu" else "numpy"
-        except Exception:  # jax unavailable / misconfigured
-            return "numpy"
-    return name
+    return _resolve_auto() if name == "auto" else name
+
+
+def set_bna_backend(name: str) -> None:
+    """One-line switch: route the batched BNA step through `name`."""
+    if name not in _BNA_BACKENDS:
+        raise ValueError(f"unknown BNA backend {name!r}; "
+                         f"expected one of {_BNA_BACKENDS}")
+    config.bna_backend = name
+
+
+@contextmanager
+def use_bna_backend(name: str):
+    prev = config.bna_backend
+    set_bna_backend(name)
+    try:
+        yield
+    finally:
+        config.bna_backend = prev
+
+
+def resolve_bna_backend(force: str | None = None) -> str:
+    """Concrete BNA-step backend for this call (mirrors the alpha knob)."""
+    name = force or config.bna_backend
+    if name not in _BNA_BACKENDS:
+        raise ValueError(f"unknown BNA backend {name!r}; "
+                         f"expected one of {_BNA_BACKENDS}")
+    return _resolve_auto() if name == "auto" else name
 
 
 _warned_fallback = False
@@ -206,9 +269,23 @@ class LRUCache:
 bna_cache = LRUCache(config.bna_cache_size, "bna")
 order_cache = LRUCache(config.order_cache_size, "order")
 
+# per-batch counters for bna_pieces_many (surfaced in cache_stats()["bna"]
+# ["batch"]): how many batched lookups ran, and how their members split
+# into cache hits, misses handed to the batched decomposition (unique
+# demands), and in-batch duplicates that shared a miss's result
+_bna_batch = {"batches": 0, "hits": 0, "misses": 0, "deduped": 0}
+
+
+def _bna_key(demand: np.ndarray) -> tuple:
+    """BNA cache key: (shape, dtype, bytes).  Keying on the full identity —
+    not just the port count and raw bytes — means demands that happen to
+    share a byte string across dtypes/shapes can neither collide nor
+    spuriously hit each other's entries."""
+    return (demand.shape, demand.dtype.str, demand.tobytes())
+
 
 def bna_pieces(demand: np.ndarray) -> list:
-    """BNA decomposition of `demand`, memoized on the demand bytes.
+    """BNA decomposition of `demand`, memoized on (shape, dtype, bytes).
 
     The returned pieces are shared across callers and must be treated as
     read-only (every consumer in core/ only reads them).
@@ -216,7 +293,7 @@ def bna_pieces(demand: np.ndarray) -> list:
     from .bna import bna
 
     bna_cache.maxsize = config.bna_cache_size
-    key = (demand.shape[0], demand.tobytes())
+    key = _bna_key(demand)
     found, pieces = bna_cache.lookup(key)
     if not found:
         pieces = bna(demand)
@@ -224,13 +301,83 @@ def bna_pieces(demand: np.ndarray) -> list:
     return pieces
 
 
+def bna_pieces_many(demands: list, keys: list | None = None) -> list:
+    """BNA decompositions for a whole batch of demands: the LRU is
+    consulted first, and ONLY the misses (deduplicated — repeated demands
+    in one batch decompose once) go through the batched ``bna_many``
+    decomposition in a single call.  Results are bit-identical to
+    ``[bna_pieces(d) for d in demands]``; per-batch hit/miss counts land in
+    ``cache_stats()["bna"]["batch"]``.  ``keys`` accepts precomputed
+    ``_bna_key`` values (same order as ``demands``) so callers that
+    already serialized the batch — the prefetch guard — don't pay the
+    hashing twice."""
+    from .matching import bna_many
+
+    bna_cache.maxsize = config.bna_cache_size
+    out: list = [None] * len(demands)
+    miss_keys: list = []
+    miss_demands: list = []
+    by_key: dict = {}
+    hits = 0
+    for i, dem in enumerate(demands):
+        key = _bna_key(dem) if keys is None else keys[i]
+        found, pieces = bna_cache.lookup(key)
+        if found:
+            out[i] = pieces
+            hits += 1
+            continue
+        slot = by_key.get(key)
+        if slot is None:
+            by_key[key] = [i]
+            miss_keys.append(key)
+            miss_demands.append(dem)
+        else:
+            slot.append(i)
+    if miss_demands:
+        for key, pieces in zip(miss_keys, bna_many(miss_demands)):
+            bna_cache.store(key, pieces)
+            for i in by_key[key]:
+                out[i] = pieces
+    _bna_batch["batches"] += 1
+    _bna_batch["hits"] += hits
+    _bna_batch["misses"] += len(miss_demands)
+    _bna_batch["deduped"] += len(demands) - hits - len(miss_demands)
+    return out
+
+
+def prefetch_bna(demands: "Iterable[np.ndarray]") -> None:
+    """Warm the BNA cache for every demand in one batched call — the
+    instance-level prefetch ``engine.plan`` and ``SchedulerSession`` issue
+    before ``dma.isolated_job_unit`` / ``dma_srt`` walk jobs one by one.
+
+    A no-op when batching is off (REPRO_BNA_BATCH=0), the cache is
+    disabled, or the instance's distinct demands cannot all FIT in the
+    cache: a batch bigger than ``maxsize`` necessarily evicts some of its
+    own entries — refreshed hits included — before the scheduler's walk
+    reads them (sequential-LRU thrash: those lookups miss and re-run
+    scalar BNA on top of the batched work, strictly worse than the scalar
+    path).  Raise REPRO_BNA_CACHE_SIZE to batch bigger instances."""
+    if not config.bna_batch or config.bna_cache_size <= 0:
+        return
+    ds = list(demands)
+    if not ds:
+        return
+    keys = [_bna_key(d) for d in ds]
+    if len(set(keys)) > config.bna_cache_size:
+        return
+    bna_pieces_many(ds, keys=keys)
+
+
 def cache_stats() -> dict:
-    return {"bna": bna_cache.stats(), "order": order_cache.stats()}
+    return {"bna": {**bna_cache.stats(), "batch": dict(_bna_batch)},
+            "order": order_cache.stats()}
 
 
 def clear_caches() -> None:
     bna_cache.clear()
     order_cache.clear()
+    for k in _bna_batch:
+        _bna_batch[k] = 0
 
 
 @contextmanager

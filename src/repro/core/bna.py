@@ -30,12 +30,25 @@ or makes a port tight, so there are at most nnz + 2m iterations.
 The perfect matching is maintained incrementally across iterations (repair
 via augmenting paths only for ports whose matched edge became invalid),
 keeping the whole decomposition near O((nnz + m) * m) vector ops.
+
+This module is the *scalar reference*: one coflow at a time, the code the
+correctness argument above reads against.  The batched subsystem
+(``core/matching.py``) decomposes many coflows at once — same pieces,
+bit-identical (it shares :func:`support_restrict` / :func:`expand_pieces`
+and the `_augment` repair below) — and is what the engine's prefetch path
+actually runs; see ``core/backend.py`` (``bna_pieces_many``).
 """
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["bna", "schedule_total_time", "verify_bna_schedule"]
+__all__ = [
+    "bna",
+    "schedule_total_time",
+    "verify_bna_schedule",
+    "support_restrict",
+    "expand_pieces",
+]
 
 _NO_MATCH = -1
 
@@ -84,16 +97,19 @@ def _augment(start: int, adj_fn, match_sr: np.ndarray, match_rs: np.ndarray, m: 
     return False
 
 
-def bna(demand: np.ndarray, validate: bool = False) -> list[tuple[int, np.ndarray]]:
-    """Decompose `demand` into a list of (duration, matching) pieces.
+def support_restrict(
+    demand: np.ndarray,
+) -> tuple[np.ndarray | None, np.ndarray | None, np.ndarray | None]:
+    """Validate `demand` and restrict it to its SUPPORT ports.
 
-    matching: int array (m,), matching[s] = r when (s, r) transmits for the
-    whole piece, -1 when sender s idles. Total time == effective size D.
-
-    The matching problem is restricted to the demand's SUPPORT ports (rows/
-    columns with any load): zero-load ports are never tight and never bind
-    the step length, so they can idle throughout — this makes the cost
-    scale with the coflow's width, not the switch size.
+    Returns ``(sub, rows_p, cols_p)``: ``sub`` is the k x k int64 matrix over
+    the loaded ports (k = max(#loaded rows, #loaded cols); loaded rows/cols
+    first, padded with arbitrary idle ports up to square), ``rows_p`` /
+    ``cols_p`` map its axes back to the full port ids — or ``None`` when no
+    restriction applies (k == m).  ``sub is None`` means the demand is all
+    zero.  Zero-load ports are never tight and never bind the step length,
+    so they can idle throughout — this makes the decomposition cost scale
+    with the coflow's width, not the switch size.
     """
     d_full = np.asarray(demand, dtype=np.int64)
     if d_full.ndim != 2 or d_full.shape[0] != d_full.shape[1]:
@@ -105,22 +121,48 @@ def bna(demand: np.ndarray, validate: bool = False) -> list[tuple[int, np.ndarra
     cols = np.flatnonzero(d_full.sum(axis=0) > 0)
     k = max(rows.size, cols.size)
     if k == 0:
-        return []
+        return None, None, None
     if k < m_full:
         rows_p = np.concatenate([rows, np.setdiff1d(np.arange(m_full), rows)[: k - rows.size]])
         cols_p = np.concatenate([cols, np.setdiff1d(np.arange(m_full), cols)[: k - cols.size]])
-        sub = d_full[np.ix_(rows_p, cols_p)]
-        pieces = _bna_core(sub)
-        out: list[tuple[int, np.ndarray]] = []
-        for t, match in pieces:
-            full = np.full(m_full, _NO_MATCH, dtype=np.int64)
-            ss = np.flatnonzero(match != _NO_MATCH)
-            full[rows_p[ss]] = cols_p[match[ss]]
-            out.append((t, full))
+        return d_full[np.ix_(rows_p, cols_p)], rows_p, cols_p
+    return d_full, None, None
+
+
+def expand_pieces(
+    pieces: list[tuple[int, np.ndarray]],
+    rows_p: np.ndarray, cols_p: np.ndarray, m_full: int,
+) -> list[tuple[int, np.ndarray]]:
+    """Map support-restricted (duration, matching) pieces back to full
+    port ids (inverse of :func:`support_restrict`'s axis remap)."""
+    out: list[tuple[int, np.ndarray]] = []
+    for t, match in pieces:
+        full = np.full(m_full, _NO_MATCH, dtype=np.int64)
+        ss = np.flatnonzero(match != _NO_MATCH)
+        full[rows_p[ss]] = cols_p[match[ss]]
+        out.append((t, full))
+    return out
+
+
+def bna(demand: np.ndarray, validate: bool = False) -> list[tuple[int, np.ndarray]]:
+    """Decompose `demand` into a list of (duration, matching) pieces.
+
+    matching: int array (m,), matching[s] = r when (s, r) transmits for the
+    whole piece, -1 when sender s idles. Total time == effective size D.
+
+    The matching problem is restricted to the demand's SUPPORT ports via
+    :func:`support_restrict`.
+    """
+    d_full = np.asarray(demand, dtype=np.int64)
+    sub, rows_p, cols_p = support_restrict(d_full)
+    if sub is None:
+        return []
+    if rows_p is not None:
+        out = expand_pieces(_bna_core(sub), rows_p, cols_p, d_full.shape[0])
         if validate:
             verify_bna_schedule(d_full, out)
         return out
-    return _bna_core(d_full, validate=validate)
+    return _bna_core(sub, validate=validate)
 
 
 def _bna_core(demand: np.ndarray, validate: bool = False) -> list[tuple[int, np.ndarray]]:

@@ -16,16 +16,32 @@ from .timeline import (EdgeIntervals, FinalSchedule, UnitSchedule,
                        merge_and_fix, unit_from_coflow_plan)
 from .types import Coflow, Job, aggregate_size, topological_order
 
-__all__ = ["isolated_job_unit", "draw_delays", "dma", "cached_bna"]
+__all__ = ["isolated_job_unit", "draw_delays", "dma", "cached_bna",
+           "check_delays_mode"]
+
+_DELAY_MODES = ("random", "spread")
+
+
+def check_delays_mode(delays: str) -> None:
+    """Validate a Step 2 delay mode: "random" is the paper's randomized
+    draw; "spread" is the deterministic evenly-spaced mode
+    (draw_delays(rng=None), the §IV-C de-randomization stand-in) that the
+    registry exposes as ``make_scheduler("gdm", delays="spread")``."""
+    if delays not in _DELAY_MODES:
+        raise ValueError(f"unknown delays mode {delays!r}; "
+                         f"expected one of {_DELAY_MODES}")
 
 
 def cached_bna(c: Coflow) -> list:
-    """BNA decomposition memoized on the demand *bytes* (bounded LRU in
-    backend.py): G-DM, DMA-RT, O(m)Alg, every beta point of a sweep, AND
-    every online reschedule share the same isolated schedules.  The old
-    per-object memo missed across online reschedules because _sub_instance
-    builds fresh Coflow objects each arrival; the bytes key hits whenever
-    the remaining demand is unchanged."""
+    """BNA decomposition memoized on the demand's (shape, dtype, bytes)
+    (bounded LRU in backend.py): G-DM, DMA-RT, O(m)Alg, every beta point of
+    a sweep, AND every online reschedule share the same isolated schedules.
+    The old per-object memo missed across online reschedules because
+    _sub_instance builds fresh Coflow objects each arrival; the content key
+    hits whenever the remaining demand is unchanged.  The engine's
+    instance-level prefetch (backend.prefetch_bna, issued by engine.plan
+    and the session before the per-job walk below) warms this same cache
+    through the batched bna_many, so these lookups are typically hits."""
     return bna_pieces(c.demand)
 
 
@@ -68,13 +84,17 @@ def dma(
     origin: int = 0,
     decompose: bool = False,
     use_kernel: bool | None = None,
+    delays: str = "random",
 ) -> FinalSchedule:
     """Schedule a set of general-DAG jobs; makespan O(mu * g(m)) x OPT whp
-    (Theorem 2)."""
+    (Theorem 2).  delays="spread" selects the deterministic evenly-spaced
+    Step 2 delays (see check_delays_mode)."""
+    check_delays_mode(delays)
     if rng is None:
         rng = np.random.default_rng(0)
     units = [isolated_job_unit(j) for j in jobs]
     delta = aggregate_size(c.demand for j in jobs for c in j.coflows)
-    delays = draw_delays([j.jid for j in jobs], delta, beta, rng)
-    return merge_and_fix(units, m, delays, origin=origin,
+    delay_map = draw_delays([j.jid for j in jobs], delta, beta,
+                            None if delays == "spread" else rng)
+    return merge_and_fix(units, m, delay_map, origin=origin,
                          decompose=decompose, use_kernel=use_kernel)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .dma import cached_bna, draw_delays
+from .dma import cached_bna, check_delays_mode, draw_delays
 from .timeline import FinalSchedule, UnitSchedule, merge_and_fix, unit_from_coflow_plan
 from .types import (Job, aggregate_size, children_of, coflow_layers,
                     is_rooted_forest, parents_of)
@@ -120,10 +120,15 @@ def dma_srt(
     decompose: bool = True,
     require_tree: bool = True,
     use_kernel: bool | None = None,
+    delays: str = "random",
 ) -> FinalSchedule:
     """Single rooted-tree job; makespan O(sqrt(mu) * h(m, mu)) x OPT whp
-    (Theorem 3)."""
-    starts = srt_start_times(job, beta, rng, require_tree=require_tree)
+    (Theorem 3).  delays="spread" de-randomizes the per-path delays
+    (srt_start_times with rng=None)."""
+    check_delays_mode(delays)
+    starts = srt_start_times(job, beta,
+                             None if delays == "spread" else rng,
+                             require_tree=require_tree)
     units: list[UnitSchedule] = []
     for cid, c in enumerate(job.coflows):
         pieces = cached_bna(c)
@@ -143,6 +148,7 @@ def dma_rt(
     require_tree: bool = True,
     use_kernel: bool | None = None,
     nested: bool = True,
+    delays: str = "random",
 ) -> FinalSchedule:
     """Multiple rooted-tree jobs; makespan O(sqrt(mu) g(m) h(m, mu)) x OPT
     whp (Theorem 4).
@@ -152,20 +158,26 @@ def dma_rt(
     nested=False is the flat fast path: per-path start times within jobs
     (DMA-SRT Steps 1-2) + per-job delays, ONE global merge-and-fix — the
     same randomized-delay/merge principle with a single expansion; used by
-    the large benchmark sweeps (tests check both are feasible and close)."""
+    the large benchmark sweeps (tests check both are feasible and close).
+
+    delays="spread" de-randomizes both delay layers (per-path start times
+    and per-job delays)."""
+    check_delays_mode(delays)
     if rng is None:
         rng = np.random.default_rng(0)
     if nested:
         units = [
             dma_srt(j, m, beta, rng, decompose=True,
-                    require_tree=require_tree).to_unit(j.jid)
+                    require_tree=require_tree, delays=delays).to_unit(j.jid)
             for j in jobs
         ]
     else:
         from .timeline import EdgeIntervals, unit_from_coflow_plan
         units = []
         for j in jobs:
-            starts = srt_start_times(j, beta, rng, require_tree=require_tree)
+            starts = srt_start_times(j, beta,
+                                     None if delays == "spread" else rng,
+                                     require_tree=require_tree)
             parts = [unit_from_coflow_plan(j.jid, cid, c.demand,
                                            cached_bna(c), starts[cid])
                      for cid, c in enumerate(j.coflows)]
@@ -174,6 +186,7 @@ def dma_rt(
                 uid=j.jid, edges=edges,
                 ledger=[e for p in parts for e in p.ledger]))
     delta = aggregate_size(c.demand for j in jobs for c in j.coflows)
-    delays = draw_delays([j.jid for j in jobs], delta, beta, rng)
-    return merge_and_fix(units, m, delays, origin=origin,
+    delay_map = draw_delays([j.jid for j in jobs], delta, beta,
+                            None if delays == "spread" else rng)
+    return merge_and_fix(units, m, delay_map, origin=origin,
                          decompose=decompose, use_kernel=use_kernel)

@@ -211,6 +211,12 @@ class _Registered:
     opts: dict = field(default_factory=dict)
 
     def plan_full(self, instance: Instance) -> PlanResult:
+        # instance-level BNA prefetch: one batched bna_pieces_many call
+        # warms the cache for every coflow BEFORE the factory's
+        # isolated_job_unit / dma_srt walk jobs one at a time (no-op when
+        # batching or the cache is off; results-identical either way)
+        backend.prefetch_bna(c.demand for j in instance.jobs
+                             for c in j.coflows)
         return PlanResult(self.name,
                           _REGISTRY[self.name].factory(instance, **self.opts))
 
@@ -252,28 +258,33 @@ def _rng(opts_rng, seed):
     return np.random.default_rng(seed) if opts_rng is None else opts_rng
 
 
-_GDM_OPTS = ("beta", "seed", "rng", "nested", "decompose")
+_GDM_OPTS = ("beta", "seed", "rng", "nested", "decompose", "delays")
 _GDM_RT_OPTS = _GDM_OPTS + ("require_tree",)
 _OM_ALG_OPTS = ("decompose", "seed")
 
 
 @register_scheduler("gdm", "G-DM (Algorithm 4): primal-dual order + "
-                           "geometric groups + DMA per group",
+                           "geometric groups + DMA per group; "
+                           "delays=random|spread",
                     options=_GDM_OPTS)
 def _gdm(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
-         nested: bool = True, decompose: bool = False) -> CompositeSchedule:
+         nested: bool = True, decompose: bool = False,
+         delays: str = "random") -> CompositeSchedule:
     return gdm(instance, beta=beta, rng=_rng(rng, seed), rooted=False,
-               decompose=decompose, nested=nested)
+               decompose=decompose, nested=nested, delays=delays)
 
 
 @register_scheduler("gdm_rt", "G-DM-RT (Algorithm 4 over rooted trees, "
-                              "DMA-RT groups; nested=False = flat fast path)",
+                              "DMA-RT groups; nested=False = flat fast "
+                              "path; delays=random|spread)",
                     options=_GDM_RT_OPTS)
 def _gdm_rt(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
             nested: bool = True, decompose: bool = False,
-            require_tree: bool = True) -> CompositeSchedule:
+            require_tree: bool = True,
+            delays: str = "random") -> CompositeSchedule:
     return gdm(instance, beta=beta, rng=_rng(rng, seed), rooted=True,
-               decompose=decompose, nested=nested, require_tree=require_tree)
+               decompose=decompose, nested=nested, require_tree=require_tree,
+               delays=delays)
 
 
 @register_scheduler("om_alg", "O(m)Alg baseline: one-at-a-time jobs in "

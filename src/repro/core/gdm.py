@@ -68,12 +68,22 @@ def gdm(
     use_kernel: bool | None = None,
     nested: bool = True,
     require_tree: bool = True,
+    delays: str = "random",
 ) -> CompositeSchedule:
     """G-DM (rooted=False) / G-DM-RT (rooted=True).
 
     require_tree=False lets G-DM-RT accept non-tree jobs: DMA-SRT's start
     times fall back to start-after-parents for those jobs (precedence-exact;
-    only the rooted-tree analysis constant is lost)."""
+    only the rooted-tree analysis constant is lost).
+
+    delays="spread" selects the deterministic evenly-spaced Step 2 delays
+    (dma.draw_delays with rng=None): the plan becomes rng-independent, and
+    with singleton geometric groups it coincides with the job-sequential
+    O(m)Alg layout — which is what makes the session's frontier-append
+    plan repair certifiable for spread-mode G-DM (see core/session.py)."""
+    from .dma import check_delays_mode
+
+    check_delays_mode(delays)
     if rng is None:
         rng = np.random.default_rng(0)
     by_id = {j.jid: j for j in instance.jobs}
@@ -88,11 +98,11 @@ def gdm(
             sub = dma_rt(jobs, instance.m, beta=beta, rng=rng,
                          origin=int(start), decompose=decompose,
                          use_kernel=use_kernel, nested=nested,
-                         require_tree=require_tree)
+                         require_tree=require_tree, delays=delays)
         else:
             sub = dma(jobs, instance.m, beta=beta, rng=rng,
                       origin=int(start), decompose=decompose,
-                      use_kernel=use_kernel)
+                      use_kernel=use_kernel, delays=delays)
         parts.append(sub)
         t_cur = int(math.ceil(sub.makespan))
     return CompositeSchedule(parts, instance, meta={

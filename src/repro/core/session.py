@@ -42,11 +42,25 @@ job-sequential ``om_alg`` scheduler with:
   effective-size windows in topological order — this check is what makes
   the path self-verifying rather than trusted).
 
-Everything else — interleaving schedulers (G-DM groups re-derive random
-delays per plan), mid-window arrivals, partially-executed coflows — falls
-back to the full replan.  Repair/replan counts, the repair hit rate, and
-warm-replan wall-clock are reported in :class:`SessionStats` alongside the
-engine's BNA/order cache stats.
+Spread-mode G-DM (``SchedulerSession(m, "gdm", delays="spread")``) also
+attempts the fast path: its delays are deterministic, and whenever the
+geometric grouping of the residual instance is singleton (every group one
+job — checked explicitly against ``group_jobs``), each group is exactly an
+isolated job schedule, so the plan coincides with the job-sequential
+O(m)Alg layout and the same window checks certify the splice.  Randomized
+G-DM, non-singleton groupings, interleaving plans, mid-window arrivals,
+partially-executed coflows — everything else falls back to the full replan
+(the checks above are evaluated, and a failure rejects).  Repair/replan
+counts, the repair hit rate, and warm-replan wall-clock are reported in
+:class:`SessionStats` alongside the engine's BNA/order cache stats.
+
+Engine-backed planning events prefetch the whole residual instance's BNA
+decompositions in one batched ``bna_pieces_many`` call
+(``backend.prefetch_bna``, issued inside ``plan_full``) before the
+scheduler walks jobs one by one — the engine's instance-level batching
+(see ``core/matching.py``); the repair path prefetches the newly-arrived
+jobs the same way.  Plain-callable schedulers are left unprefetched (the
+session cannot know whether they decompose demands at all).
 """
 from __future__ import annotations
 
@@ -530,9 +544,14 @@ class SchedulerSession:
         s = self._scheduler
         plan_full = getattr(s, "plan_full", None)
         if callable(plan_full):
-            p = plan_full(sub)
+            p = plan_full(sub)   # engine path: plan_full prefetches itself
             self._last_plan = p
             return p, p.transcript()
+        # plain callables get NO speculative prefetch: the session cannot
+        # know they decompose demands at all, and a non-BNA heuristic
+        # would pay every coflow's decomposition for nothing.  BNA-based
+        # callables still share the LRU scalar-style; register through the
+        # engine to batch.
         plan = getattr(s, "plan", None)
         if callable(plan) and not isinstance(s, type):
             return None, plan(sub)
@@ -574,7 +593,18 @@ class SchedulerSession:
         """Splice the newly-arrived jobs past the retained plan's frontier,
         when provably identical to a full replan (module docstring).
         Returns the repaired _Epoch, or None to fall back."""
-        if not self.repair or self._scheduler_name != "om_alg":
+        if not self.repair:
+            return None
+        name = self._scheduler_name
+        opts = getattr(self._scheduler, "opts", None) or {}
+        # om_alg is job-sequential by construction; spread-mode G-DM is
+        # deterministic and certifiable when its grouping is singleton and
+        # order-aligned (checked below) — randomized G-DM always falls back
+        # (its groups re-derive random delays per plan), and G-DM-RT stays
+        # out because DMA-SRT's path-based start times differ from the
+        # isolated-job layout the splice constructs
+        if not (name == "om_alg"
+                or (name == "gdm" and opts.get("delays") == "spread")):
             return None
         ep = self._epoch
         if ep is None or ep.plan is None or not self._arrived_since_plan:
@@ -608,6 +638,22 @@ class SchedulerSession:
         n_old = len(old_order)
         if order[:n_old] != old_order or set(order[n_old:]) != new_jids:
             return reject()
+
+        # (2b) spread-mode G-DM only: a from-scratch replan must coincide
+        # with the job-sequential layout, which holds exactly when every
+        # geometric group is a single job AND the group sequence follows
+        # the Algorithm 5 order (group keys T_j + rho_j + D_j need not be
+        # monotone along the order, so this is a real check).  A singleton
+        # group's spread delay is 0, so each group is exactly the isolated
+        # job schedule back-to-back — the same construction the splice and
+        # the retained-window check (3) assume.
+        if name == "gdm":
+            from .gdm import group_jobs
+
+            groups = group_jobs(sub, order)
+            if [g[0] for g in groups] != list(order) or \
+                    any(len(g) != 1 for g in groups):
+                return reject()
 
         # (3) retained ledger windows == the windows a from-scratch om_alg
         # replan would emit: back-to-back effective-size windows per coflow
@@ -655,6 +701,10 @@ class SchedulerSession:
             return reject()
         t_new = int(round(cursor))
         units = []
+        from . import backend
+
+        backend.prefetch_bna(c.demand for jid in order[n_old:]
+                             for c in by_jid[jid].coflows)
         for jid in order[n_old:]:
             job = by_jid[jid]
             units.append(isolated_job_unit(job, start=t_new))
@@ -662,7 +712,9 @@ class SchedulerSession:
         if units:
             new_parts.append(merge_and_fix(units, self.m, origin=0))
         sched = CompositeSchedule(new_parts, sub, meta={
-            "order": list(order), "algorithm": "O(m)Alg", "repaired": True})
+            "order": list(order),
+            "algorithm": ep.plan.schedule.meta.get("algorithm", "O(m)Alg"),
+            "repaired": True})
         plan = PlanResult(ep.plan.name, sched)
         self._last_plan = plan
         return self._make_epoch(plan.transcript(), plan, cid_maps, sub)

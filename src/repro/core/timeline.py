@@ -343,13 +343,22 @@ class FinalSchedule:
                            for j, c in zip(self.merged.jid, self.merged.cid)])
             if mk.any():
                 m_ = self.merged
-                if float(m_.t0[mk].min()) < tau - 1e-6:
+                # merged edges live in pre-expansion local time; map them
+                # through the expansion (exact at event boundaries) so the
+                # splice point — which is expanded/absolute — compares
+                # correctly for parts with a non-zero origin too (G-DM
+                # group parts; om_alg's single part has the identity map)
+                et0 = np.round(np.asarray(self.expand_time(m_.t0[mk]),
+                                          dtype=np.float64)).astype(np.int64)
+                et1 = np.round(np.asarray(self.expand_time(m_.t1[mk]),
+                                          dtype=np.float64)).astype(np.int64)
+                if int(et0.min()) < tau - 1e-6:
                     raise ValueError("kept merged edge precedes splice point")
                 itau = int(round(tau))
                 cid_new = np.array(
                     [cid_remap[(int(j), int(c))]
                      for j, c in zip(m_.jid[mk], m_.cid[mk])], dtype=np.int64)
-                merged = EdgeIntervals(m_.t0[mk] - itau, m_.t1[mk] - itau,
+                merged = EdgeIntervals(et0 - itau, et1 - itau,
                                        m_.s[mk], m_.r[mk], m_.owner[mk],
                                        m_.jid[mk], cid_new)
                 ev = np.unique(np.concatenate([merged.t0, merged.t1]))

@@ -10,6 +10,10 @@ Kernels:
   ssd_scan        — Mamba2 state-space-duality chunked scan
   coflow_merge    — the paper's DMA merge hot loop: per-interval per-port
                     packet counts and alpha_t via running prefix sums
+  bna_step        — the batched matching hot loop: one lock-step iteration
+                    of the multi-coflow BNA decomposition (step lengths,
+                    transmissions, matched-edge invalidation) over a
+                    (B, w, w) demand stack; bit-identical to its numpy ref
 
 TPU is the *target*; on this CPU-only container every kernel runs in
 interpret mode (the kernel body executes in Python), which is how the test

@@ -1,0 +1,1 @@
+from .ops import bna_step_batch  # noqa: F401

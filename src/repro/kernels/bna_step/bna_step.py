@@ -1,0 +1,125 @@
+"""bna_step kernel — the batched BNA inner loop (core of Algorithm 1 at
+batch scale, the matching analogue of coflow_merge).
+
+One invocation performs one lock-step iteration of the filled-matrix BNA
+decomposition for a whole (B, w, w) stack of demand matrices: the matched
+demands are gathered through a one-hot of the current matching, the step
+length is the three-term min of line 5 (matched demand, idle-sender slack
+D - row, idle-receiver slack D - col), the transmissions are applied, and
+the matched-edge invalidation mask for the host-side augmenting-path repair
+is emitted.  Everything is elementwise/reduction int32 arithmetic — the
+kernel is BIT-IDENTICAL to the numpy oracle (`ref.bna_step_ref`), which is
+what lets `REPRO_BNA_BACKEND=pallas` keep plans byte-for-byte equal.
+
+TPU mapping: grid over B-blocks ("parallel" — matrices are independent),
+each step loading a (block_b, w, w) demand tile plus its (block_b, w) state
+rows into VMEM.  The gather is realized as a one-hot broadcast-compare
+(match index vs a receiver iota) followed by a masked reduction — the
+standard TPU trick for small-axis gathers, keeping the whole body on the
+VPU.  Arithmetic intensity is ~3 ops/byte over the w*w tile: memory-bound,
+like coflow_merge; the roofline section of `benchmarks.roofline_report`
+reports the memory term at K -> 1e5.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import tpu_compiler_params
+
+_NO_MATCH = -1
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+def _bna_step_kernel(d_ref, row_ref, col_ref, D_ref, match_ref,
+                     t_ref, piece_ref, dn_ref, rown_ref, coln_ref,
+                     Dn_ref, inv_ref):
+    d = d_ref[...]                     # (Bb, w, w) int32
+    row = row_ref[...]                 # (Bb, w)
+    col = col_ref[...]
+    Dv = D_ref[...]                    # (Bb, 1)
+    match = match_ref[...]             # (Bb, w)
+
+    r_ids = jax.lax.broadcasted_iota(jnp.int32, d.shape, dimension=2)
+    onehot = (r_ids == match[:, :, None]) & (match[:, :, None] != _NO_MATCH)
+    dm = jnp.sum(jnp.where(onehot, d, 0), axis=2)          # (Bb, w)
+    real = (match != _NO_MATCH) & (dm > 0)
+
+    t = jnp.min(jnp.where(real, dm, _BIG), axis=1, keepdims=True)
+    t = jnp.minimum(t, jnp.min(jnp.where(~real, Dv - row, _BIG),
+                               axis=1, keepdims=True))
+    recv = jnp.any(onehot & real[:, :, None], axis=1)      # (Bb, w)
+    t = jnp.minimum(t, jnp.min(jnp.where(~recv, Dv - col, _BIG),
+                               axis=1, keepdims=True))
+
+    served = onehot & real[:, :, None]
+    dn = d - jnp.where(served, t[:, :, None], 0)
+    rown = row - jnp.where(real, t, 0)
+    coln = col - jnp.where(recv, t, 0)
+    Dn = Dv - t
+
+    dmn = dm - jnp.where(real, t, 0)
+    colm = jnp.sum(jnp.where(onehot, coln[:, None, :], 0), axis=2)
+    invalid = (match != _NO_MATCH) & (dmn == 0) \
+        & ((rown >= Dn) | (colm >= Dn)) & (Dn > 0)
+
+    t_ref[...] = t
+    piece_ref[...] = jnp.where(real, match, _NO_MATCH)
+    dn_ref[...] = dn
+    rown_ref[...] = rown
+    coln_ref[...] = coln
+    Dn_ref[...] = Dn
+    inv_ref[...] = invalid.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def bna_step_padded(
+    d: jax.Array,       # (B_pad, w_pad, w_pad) int32, B_pad % block_b == 0
+    row: jax.Array,     # (B_pad, w_pad) int32
+    col: jax.Array,
+    D: jax.Array,       # (B_pad, 1) int32
+    match: jax.Array,   # (B_pad, w_pad) int32
+    *,
+    block_b: int,
+    interpret: bool,
+):
+    B, w, _ = d.shape
+    assert B % block_b == 0
+    grid = (B // block_b,)
+    i32 = jnp.int32
+    return pl.pallas_call(
+        _bna_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, w, w), lambda ib: (ib, 0, 0)),
+            pl.BlockSpec((block_b, w), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, w), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, 1), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, w), lambda ib: (ib, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, w), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, w, w), lambda ib: (ib, 0, 0)),
+            pl.BlockSpec((block_b, w), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, w), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, 1), lambda ib: (ib, 0)),
+            pl.BlockSpec((block_b, w), lambda ib: (ib, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), i32),       # t
+            jax.ShapeDtypeStruct((B, w), i32),       # piece
+            jax.ShapeDtypeStruct((B, w, w), i32),    # d'
+            jax.ShapeDtypeStruct((B, w), i32),       # row'
+            jax.ShapeDtypeStruct((B, w), i32),       # col'
+            jax.ShapeDtypeStruct((B, 1), i32),       # D'
+            jax.ShapeDtypeStruct((B, w), i32),       # invalid
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(d, row, col, D, match)

@@ -1,0 +1,68 @@
+"""Public wrapper for bna_step: int64 <-> int32 marshalling with an
+overflow guard, padding to kernel tiles, dispatch (interpret on CPU).
+
+Padding is semantics-transparent: padded matrices (batch axis) carry zero
+demand and an empty matching, so their step length is 0 and their state is
+a fixed point; padded ports (width axis) have zero load and match == -1, so
+they are never real-matched and never bind the step length (their slack is
+D - 0 = D >= t always).  The int32 narrowing is exact under the guard —
+every input is bounded by the effective size, so all intermediates fit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import default_interpret
+from .bna_step import bna_step_padded
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def bna_step_batch(
+    d: np.ndarray,      # (B, w, w) int64
+    row: np.ndarray,    # (B, w) int64
+    col: np.ndarray,    # (B, w) int64
+    D: np.ndarray,      # (B,) int64
+    match: np.ndarray,  # (B, w) int64
+    *,
+    block_b: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[np.ndarray, ...]:
+    """One batched BNA step through the Pallas kernel; numpy int64 in/out,
+    bit-identical to ``ref.bna_step_ref`` on the same state."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, w, _ = d.shape
+    if int(D.max(initial=0)) >= _I32_MAX:
+        raise ValueError("demand too large for the int32 bna_step kernel "
+                         f"(effective size {int(D.max())} >= 2^31-1); "
+                         "use the numpy backend")
+    # pad the batch to a power of two (>= 8) so the shrinking active set
+    # revisits at most O(log B) compiled shapes; lanes to the VPU multiple
+    b_pad = max(8, 1 << max(B - 1, 0).bit_length())
+    lane = 8 if interpret else 128
+    w_pad = max(lane, ((w + lane - 1) // lane) * lane)
+    bb = min(block_b or 128, b_pad)
+
+    def pad2(a, fill=0):
+        out = np.full((b_pad, w_pad), fill, dtype=np.int32)
+        out[:B, :w] = a
+        return out
+
+    d32 = np.zeros((b_pad, w_pad, w_pad), dtype=np.int32)
+    d32[:B, :w, :w] = d
+    D32 = np.zeros((b_pad, 1), dtype=np.int32)
+    D32[:B, 0] = D
+    outs = bna_step_padded(
+        d32, pad2(row), pad2(col), D32, pad2(match, fill=-1),
+        block_b=bb, interpret=interpret)
+    t, piece, dn, rown, coln, Dn, inv = (np.asarray(o) for o in outs)
+    return (
+        t[:B, 0].astype(np.int64),
+        piece[:B, :w].astype(np.int64),
+        dn[:B, :w, :w].astype(np.int64),
+        rown[:B, :w].astype(np.int64),
+        coln[:B, :w].astype(np.int64),
+        Dn[:B, 0].astype(np.int64),
+        inv[:B, :w].astype(bool),
+    )

@@ -1,0 +1,42 @@
+"""Pure-numpy oracle for the batched BNA step (one lock-step iteration of
+Algorithm 1 in filled-matrix form, across a (B, w, w) demand stack).
+
+Unlike the other kernels' refs this one is numpy, not jnp — and it is not
+a re-implementation: it wraps ``core.matching.bna_step_inplace`` (the
+single numpy source of the step formulas, the code the numpy backend
+actually runs) on copies, so the kernel parity sweep transitively pins the
+kernel against the production step.  All-integer ops, so "allclose" is
+equality.  Padded ports (zero load, match == -1) are neutral by
+construction: they are never real-matched and constrain the step length
+only by D - 0 = D, which never binds because the step is always <= the
+minimum matched demand <= D.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def bna_step_ref(
+    d: np.ndarray,      # (B, w, w) int64 remaining demands
+    row: np.ndarray,    # (B, w) int64 row loads
+    col: np.ndarray,    # (B, w) int64 col loads
+    D: np.ndarray,      # (B,) int64 remaining effective sizes
+    match: np.ndarray,  # (B, w) int64 match_sr (-1 = unmatched)
+) -> tuple[np.ndarray, ...]:
+    """One batched step: ``(t, piece, d', row', col', D', invalid)``.
+
+    t: (B,) step lengths (0 for drained matrices); piece: (B, w) the real
+    matched edges transmitted this step (-1 elsewhere); primed arrays are
+    the post-transmission state; invalid: (B, w) bool, matched edges that
+    left the filled graph (the scalar repair()'s ``bad`` mask, already
+    masked to matrices with D' > 0).
+    """
+    from repro.core.matching import bna_step_inplace
+
+    d2 = np.array(d, dtype=np.int64, copy=True)
+    row2 = np.array(row, dtype=np.int64, copy=True)
+    col2 = np.array(col, dtype=np.int64, copy=True)
+    t, piece, D2, invalid = bna_step_inplace(
+        d2, row2, col2, np.asarray(D, dtype=np.int64),
+        np.asarray(match, dtype=np.int64))
+    return t, piece, d2, row2, col2, D2, invalid

@@ -89,3 +89,54 @@ def test_coflow_merge_sweep(seed):
 def test_coflow_merge_empty():
     assert interval_alphas(np.zeros(0, int), np.zeros(0, int),
                            np.zeros(0, int), np.zeros(0, int), 0, 4).size == 0
+
+
+def _random_bna_state(rng, B, w):
+    """A batch of BNA-step states: demands with consistent row/col/D and a
+    partial matching (the kernel's arithmetic contract doesn't require the
+    matching to be perfect — parity must hold on any state, including the
+    drained all-zero matrices the batch loop leaves in place)."""
+    d = rng.integers(0, 40, size=(B, w, w))
+    d[rng.random((B, w, w)) > 0.6] = 0
+    d[0] = 0                                      # a drained matrix
+    row = d.sum(axis=2)
+    col = d.sum(axis=1)
+    D = np.maximum(row.max(axis=1), col.max(axis=1))
+    match = np.full((B, w), -1, dtype=np.int64)
+    for i in range(B):
+        perm = rng.permutation(w)
+        keep = rng.random(w) < 0.8
+        match[i, keep] = perm[keep]
+    match[0] = -1
+    return (d.astype(np.int64), row.astype(np.int64), col.astype(np.int64),
+            D.astype(np.int64), match)
+
+
+@pytest.mark.parametrize("B,w", [(1, 1), (3, 2), (8, 8), (17, 13), (40, 32)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bna_step_kernel_bit_identical(B, w, seed):
+    from repro.kernels.bna_step import bna_step_batch
+    from repro.kernels.bna_step.ref import bna_step_ref
+
+    rng = np.random.default_rng(seed)
+    state = _random_bna_state(rng, B, w)
+    got = bna_step_batch(*state)
+    want = bna_step_ref(*state)
+    names = ("t", "piece", "d", "row", "col", "D", "invalid")
+    for name, g, r in zip(names, got, want):
+        assert np.array_equal(np.asarray(g, dtype=np.int64),
+                              np.asarray(r, dtype=np.int64)), \
+            f"bna_step {name} diverged (B={B}, w={w})"
+
+
+def test_bna_step_int32_guard():
+    from repro.kernels.bna_step.ops import bna_step_batch
+
+    d = np.zeros((1, 2, 2), np.int64)
+    d[0, 0, 0] = 2**40
+    row = d.sum(axis=2)
+    col = d.sum(axis=1)
+    D = row.max(axis=1)
+    match = np.full((1, 2), -1, np.int64)
+    with pytest.raises(ValueError, match="int32"):
+        bna_step_batch(d, row, col, D, match)

@@ -1,0 +1,290 @@
+"""Batched matching subsystem (core/matching.py + the REPRO_BNA_BACKEND
+dispatch in core/backend.py):
+
+  * piece-level bit-identity — ``bna_many`` must equal scalar ``bna`` per
+    coflow across the width/dtype/zero-demand grid (property tests via the
+    hypothesis shim), on BOTH backends (pallas runs the bna_step kernel in
+    interpret mode);
+  * plan identity — the 9-scenario x 6-scheduler matrix planned with the
+    batch prefetch on (each backend) must be results-identical to the
+    scalar path (batch off);
+  * LRU key hardening — (shape, dtype, bytes) keys: differently-typed or
+    differently-shaped demands neither collide nor spuriously hit;
+  * batch cache behaviour — ``bna_pieces_many`` consults the LRU first,
+    deduplicates in-batch repeats, and surfaces per-batch hit/miss in
+    ``cache_stats()``;
+  * the spread-delay registry option (``make_scheduler("gdm",
+    delays="spread")``) — deterministic, seed-independent, validated.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import (available_schedulers, backend, bna, bna_many,
+                        bna_pieces_many, cache_stats, clear_caches, plan,
+                        prefetch_bna)
+from repro.core.backend import bna_pieces, config
+from repro.core.matching import bucket_width
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+SCHEDULERS = sorted(available_schedulers())
+# tiny sizes so the full matrix stays CI-cheap (mirrors tests/test_scenarios)
+TINY = {
+    "fb_like": dict(m=6, scale=0.03),
+    "fb_like_rt": dict(m=6, scale=0.03),
+    "alibaba_sparse": dict(m=6, scale=0.15),
+    "incast": dict(m=6, scale=0.1),
+    "shuffle_heavy": dict(m=6, scale=0.2),
+    "wide_shallow": dict(m=6, scale=0.2),
+    "online_poisson": dict(m=6, scale=0.03),
+    "deep_chain": dict(m=6, scale=0.25),
+    "dist_collectives": dict(m=8, scale=0.5),
+}
+
+
+def _assert_pieces_equal(got, want, ctx=""):
+    assert len(got) == len(want), f"{ctx}: piece count {len(got)} != {len(want)}"
+    for i, ((t1, p1), (t2, p2)) in enumerate(zip(got, want)):
+        assert t1 == t2, f"{ctx}: piece {i} duration {t1} != {t2}"
+        assert np.array_equal(p1, p2), f"{ctx}: piece {i} matching differs"
+
+
+def _random_demands(seed, n, m_max, density, hi):
+    """Mixed-width, mixed-dtype batch; density 0 yields all-zero demands
+    (the zero-demand grid point)."""
+    rng = np.random.default_rng(seed)
+    dtypes = (np.int64, np.int32, np.int16)
+    out = []
+    for i in range(n):
+        m = int(rng.integers(1, m_max + 1))
+        d = rng.integers(0, hi + 1, size=(m, m))
+        d[rng.random((m, m)) > density] = 0
+        out.append(d.astype(dtypes[i % len(dtypes)]))
+    return out
+
+
+# --------------------------------------------------------------------------
+# bit-identity vs the scalar reference
+# --------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 14),
+    m_max=st.integers(1, 12),
+    density=st.floats(0.0, 1.0),
+    hi=st.integers(1, 50),
+)
+def test_bna_many_bit_identity_numpy(seed, n, m_max, density, hi):
+    demands = _random_demands(seed, n, m_max, density, hi)
+    with backend.use_bna_backend("numpy"):
+        many = bna_many(demands, validate=True)
+    for i, (dem, pieces) in enumerate(zip(demands, many)):
+        _assert_pieces_equal(pieces, bna(np.asarray(dem, np.int64)),
+                             ctx=f"demand {i}")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bna_many_bit_identity_pallas(seed):
+    demands = _random_demands(seed, n=24, m_max=10, density=0.6, hi=40)
+    demands.append(np.zeros((4, 4), np.int64))
+    with backend.use_bna_backend("pallas"):
+        many = bna_many(demands)
+    for i, (dem, pieces) in enumerate(zip(demands, many)):
+        _assert_pieces_equal(pieces, bna(np.asarray(dem, np.int64)),
+                             ctx=f"demand {i}")
+
+
+def test_bna_many_wide_bucket_boundaries():
+    # widths straddling the power-of-two bucket cuts (8|9, 16|17)
+    rng = np.random.default_rng(3)
+    demands = []
+    for m in (7, 8, 9, 15, 16, 17):
+        d = rng.integers(0, 20, size=(m, m))
+        d[rng.random((m, m)) > 0.5] = 0
+        demands.append(d)
+    many = bna_many(demands, validate=True, force="numpy")
+    for dem, pieces in zip(demands, many):
+        _assert_pieces_equal(pieces, bna(dem))
+
+
+def test_bucket_width():
+    assert [bucket_width(k) for k in (1, 2, 3, 4, 5, 8, 9, 16, 17)] == \
+        [1, 2, 4, 4, 8, 8, 16, 16, 32]
+
+
+def test_bna_many_rejects_bad_demands():
+    with pytest.raises(ValueError):
+        bna_many([np.array([[-1, 0], [0, 0]])])
+    with pytest.raises(ValueError):
+        bna_many([np.zeros((2, 3), np.int64)])
+
+
+# --------------------------------------------------------------------------
+# plan identity: 9 scenarios x 6 schedulers x both backends
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _tiny(name):
+    return scenarios.build(name, seed=0, **TINY[name])
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_plan(scen, sched):
+    """Scalar-path reference: batch prefetch off, caches cold."""
+    built = _tiny(scen)
+    opts = scenarios.scheduler_opts(sched, built.meta)
+    prev = config.bna_batch
+    try:
+        config.bna_batch = False
+        clear_caches()
+        p = plan(built.instance, sched, seed=0, **opts)
+    finally:
+        config.bna_batch = prev
+    return p.twct(), p.job_completions()
+
+
+@pytest.mark.parametrize("sched", SCHEDULERS)
+@pytest.mark.parametrize("scen", sorted(TINY))
+def test_plan_identity_batched_backends(scen, sched):
+    built = _tiny(scen)
+    opts = scenarios.scheduler_opts(sched, built.meta)
+    ref_twct, ref_comp = _ref_plan(scen, sched)
+    for name in ("numpy", "pallas"):
+        with backend.use_bna_backend(name):
+            clear_caches()
+            p = plan(built.instance, sched, seed=0, **opts)
+        assert p.twct() == ref_twct, f"{scen}/{sched}/{name}: twct diverged"
+        assert p.job_completions() == ref_comp, \
+            f"{scen}/{sched}/{name}: completions diverged"
+
+
+# --------------------------------------------------------------------------
+# backend knob + cache behaviour
+# --------------------------------------------------------------------------
+
+def test_bna_backend_knob_validation():
+    with pytest.raises(ValueError):
+        backend.set_bna_backend("bogus")
+    prev = config.bna_backend
+    with backend.use_bna_backend("numpy"):
+        assert config.bna_backend == "numpy"
+        assert backend.resolve_bna_backend() == "numpy"
+    assert config.bna_backend == prev
+    assert backend.resolve_bna_backend("pallas") == "pallas"
+
+
+def test_bna_cache_key_shape_dtype_hardening():
+    clear_caches()
+    d64 = np.array([[3, 0], [0, 2]], dtype=np.int64)
+    d32 = d64.astype(np.int32)
+    p1 = bna_pieces(d64)
+    before = cache_stats()["bna"]
+    # same values, different dtype: must MISS (no spurious hit), and still
+    # produce the same decomposition
+    p2 = bna_pieces(d32)
+    after = cache_stats()["bna"]
+    assert after["misses"] == before["misses"] + 1
+    _assert_pieces_equal(p2, p1)
+    # same bytes, different shape: keys differ (no collision)
+    flat = np.frombuffer(d64.tobytes(), dtype=np.int64)
+    k_sq = backend._bna_key(d64)
+    k_fl = backend._bna_key(flat)
+    assert k_sq != k_fl and k_sq[2] == k_fl[2]
+    # identical array: hit
+    b2 = cache_stats()["bna"]["hits"]
+    bna_pieces(d64.copy())
+    assert cache_stats()["bna"]["hits"] == b2 + 1
+
+
+def test_bna_pieces_many_batches_only_misses():
+    clear_caches()
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 9, size=(5, 5)).astype(np.int64)
+    b = rng.integers(0, 9, size=(6, 6)).astype(np.int64)
+    out = bna_pieces_many([a, b, a.copy()])   # in-batch duplicate: one miss
+    _assert_pieces_equal(out[0], bna(a))
+    _assert_pieces_equal(out[1], bna(b))
+    assert out[2] is out[0], "in-batch duplicate should share pieces"
+    s = cache_stats()["bna"]
+    assert s["batch"] == {"batches": 1, "hits": 0, "misses": 2, "deduped": 1}
+    assert len(backend.bna_cache) == 2
+    out2 = bna_pieces_many([a, b])            # fully warm: all hits
+    assert out2[0] is out[0] and out2[1] is out[1]
+    s = cache_stats()["bna"]["batch"]
+    assert s == {"batches": 2, "hits": 2, "misses": 2, "deduped": 1}
+
+
+def test_prefetch_bna_gating():
+    clear_caches()
+    d = np.eye(3, dtype=np.int64) * 4
+    prev = config.bna_batch
+    try:
+        config.bna_batch = False
+        prefetch_bna([d])
+        assert len(backend.bna_cache) == 0, "prefetch must no-op when off"
+        config.bna_batch = True
+        prefetch_bna([d])
+        assert len(backend.bna_cache) == 1
+    finally:
+        config.bna_batch = prev
+    with backend.no_caches():
+        prefetch_bna([d])   # disabled cache: must not raise, must not store
+        assert len(backend.bna_cache) == 0
+
+
+def test_prefetch_bna_skips_when_batch_exceeds_cache():
+    """More distinct demands than the LRU can hold: a batch bigger than
+    maxsize necessarily evicts some of its own entries (refreshed hits
+    included) before the scheduler reads them (sequential-LRU thrash), so
+    the prefetch must decline and leave the scalar path to fill the cache
+    on the fly — even when only one member is actually uncached."""
+    clear_caches()
+    rng = np.random.default_rng(0)
+    demands = [rng.integers(1, 9, size=(3, 3)).astype(np.int64)
+               for _ in range(5)]
+    prev = config.bna_cache_size
+    try:
+        config.bna_cache_size = 4
+        backend.bna_cache.maxsize = 4
+        prefetch_bna(demands)
+        assert len(backend.bna_cache) == 0
+        assert cache_stats()["bna"]["batch"]["batches"] == 0
+        prefetch_bna(demands[:4])   # fits: batches normally
+        assert len(backend.bna_cache) == 4
+        prefetch_bna(demands)       # 4 cached + 1 new = 5 distinct: decline
+        assert cache_stats()["bna"]["batch"]["batches"] == 1
+        # duplicates don't count against the budget
+        prefetch_bna(demands[:4] + [demands[0].copy()])
+        assert cache_stats()["bna"]["batch"]["batches"] == 2
+    finally:
+        config.bna_cache_size = prev
+        backend.bna_cache.maxsize = prev
+        clear_caches()
+
+
+# --------------------------------------------------------------------------
+# spread-delay registry option (satellite)
+# --------------------------------------------------------------------------
+
+def test_gdm_spread_deterministic_and_seed_independent():
+    built = _tiny("fb_like")
+    a = plan(built.instance, "gdm", delays="spread", seed=0)
+    b = plan(built.instance, "gdm", delays="spread", seed=1234)
+    assert a.twct() == b.twct()
+    assert a.job_completions() == b.job_completions()
+
+
+def test_gdm_rt_spread_runs():
+    built = _tiny("fb_like_rt")
+    a = plan(built.instance, "gdm_rt", delays="spread", seed=0)
+    b = plan(built.instance, "gdm_rt", delays="spread", seed=7)
+    assert a.twct() == b.twct()
+
+
+def test_delays_mode_validated():
+    built = _tiny("fb_like")
+    with pytest.raises(ValueError, match="delays mode"):
+        plan(built.instance, "gdm", delays="bogus")

@@ -156,11 +156,83 @@ def test_repair_rejects_mid_window_arrival():
 def test_repair_never_fires_for_interleaving_schedulers():
     """G-DM groups re-derive random delays per plan; the repair path must
     not pretend to splice them (it is only certified for the job-sequential
-    baseline)."""
+    baseline and for spread-mode G-DM with singleton groups)."""
     inst = _append_workload()
     on = simulate_online(inst, "gdm", driver="session", seed=0)
     bat = simulate_online(inst, "gdm", driver="batch", seed=0)
     assert on.stats["session"]["repairs"] == 0
+    assert on.job_completions == bat.job_completions
+
+
+def _geometric_append_workload(m=10, base=4, appends=3):
+    """Geometrically growing single-coflow jobs: prefix aggregate sizes
+    roughly triple per job, so every G-DM geometric group is a singleton in
+    Algorithm 5 order and the spread-delay plan coincides with the
+    job-sequential layout; appends land on the live frontier's clean cuts
+    (probe session, as in the kernels_bench session_repair workload)."""
+    rng = np.random.default_rng(0)
+
+    def perm_demand(units):
+        d = np.zeros((m, m), np.int64)
+        for _ in range(2):
+            d[np.arange(m), rng.permutation(m)] += units
+        np.fill_diagonal(d, 0)
+        return d
+
+    jobs = [Job(k, [Coflow(k, 0, perm_demand(4 * 3 ** k))], [],
+                weight=2.0 ** -k, release=0) for k in range(base)]
+    probe = SchedulerSession(m, "gdm", delays="spread", seed=0)
+    for j in jobs:
+        probe.submit(j)
+    size = 4 * 3 ** base
+    for a in range(appends):
+        t = min(probe.frontier().completions.values())
+        jid = base + a
+        job = Job(jid, [Coflow(jid, 0, perm_demand(size))], [],
+                  weight=2.0 ** -jid, release=int(t))
+        jobs.append(job)
+        probe.advance(until=t)
+        probe.submit(job)
+        size *= 3
+    return Instance(m, jobs)
+
+
+def test_repair_fires_for_spread_mode_gdm():
+    """The ROADMAP item: de-randomized (spread) delays make G-DM's
+    group-boundary cuts splice-certifiable.  On a singleton-group workload
+    every append takes the fast path; results must match the repair-off
+    session and the batch reference exactly."""
+    inst = _geometric_append_workload()
+    on = simulate_online(inst, "gdm", driver="session", delays="spread")
+    off = simulate_online(inst, "gdm", driver="session", repair=False,
+                          delays="spread")
+    bat = simulate_online(inst, "gdm", driver="batch", delays="spread")
+    s_on = on.stats["session"]
+    assert s_on["repairs"] == 3 and s_on["repair_rejects"] == 0
+    assert s_on["full_replans"] == 1
+    assert on.job_completions == off.job_completions == bat.job_completions
+    assert on.twct() == off.twct() == bat.twct()
+
+
+def test_spread_repair_rejects_non_singleton_groups():
+    """Equal-size jobs share a geometric group, so a spread-mode replan is
+    NOT job-sequential — the certification must reject the splice (and the
+    fallback must stay results-identical to the batch loop)."""
+    m = 6
+    d = np.zeros((m, m), np.int64)
+    d[0, 1] = 16
+    d2 = np.zeros((m, m), np.int64)
+    d2[2, 3] = 16
+    d3 = np.zeros((m, m), np.int64)
+    d3[4, 5] = 16
+    jobs = [Job(0, [Coflow(0, 0, d)], [], weight=1.0, release=0),
+            Job(1, [Coflow(1, 0, d2)], [], weight=0.9, release=0),
+            Job(2, [Coflow(2, 0, d3)], [], weight=0.1, release=16)]
+    inst = Instance(m, jobs)
+    on = simulate_online(inst, "gdm", driver="session", delays="spread")
+    bat = simulate_online(inst, "gdm", driver="batch", delays="spread")
+    s = on.stats["session"]
+    assert s["repairs"] == 0 and s["repair_rejects"] >= 1
     assert on.job_completions == bat.job_completions
 
 
