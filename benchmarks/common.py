@@ -1,9 +1,19 @@
 """Shared benchmark plumbing: CSV emission, timing, workload scales.
 
 Every paper-figure benchmark emits rows
-    name,us_per_call,derived
+    name,us_per_call,compile_ms,steady_ms,backend,interpret,derived
 where `derived` carries the figure's metric (e.g. percent improvement of
 G-DM over O(m)Alg) so EXPERIMENTS.md can quote the CSV directly.
+
+Provenance columns
+------------------
+``backend`` records the resolved accelerator backends at emission time as
+``alpha:<x>|bna:<y>|plan:<z>`` and ``interpret`` whether Pallas kernels run
+under the interpreter (CPU emulation) — interpret rows measure semantics,
+not hardware, and downstream reports (roofline_report) must flag them
+instead of comparing them against analytic rooflines.  ``compile_ms`` /
+``steady_ms`` split one-time trace+compile cost from steady-state reuse for
+jitted paths (empty for pure-python rows).
 """
 from __future__ import annotations
 
@@ -13,6 +23,8 @@ from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent / "results"
 RESULTS.mkdir(exist_ok=True)
+
+CSV_HEADER = "name,us_per_call,compile_ms,steady_ms,backend,interpret,derived"
 
 # Scenario-matrix size profiles: profile -> (m override or None for the
 # scenario's default port count, scale).  Used by scenario_matrix.py and the
@@ -31,18 +43,79 @@ def build_scenario(name: str, profile: str = "fast", seed: int = 0):
     m, scale = SCENARIO_PROFILES[profile]
     return scenarios.build(name, m=m, scale=scale, seed=seed)
 
-_rows: list[tuple[str, float, str]] = []
+
+def provenance() -> tuple[str, bool]:
+    """Resolved backend triple + interpret mode for provenance columns."""
+    from repro.core.backend import (
+        resolve_alpha_backend,
+        resolve_bna_backend,
+        resolve_plan_backend,
+    )
+    from repro.kernels import default_interpret
+
+    backend = (
+        f"alpha:{resolve_alpha_backend()}"
+        f"|bna:{resolve_bna_backend()}"
+        f"|plan:{resolve_plan_backend()}"
+    )
+    return backend, default_interpret()
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    _rows.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+_rows: list[tuple[str, float, float | None, float | None, str, bool, str]] = []
+
+
+def _fmt_ms(v: float | None) -> str:
+    return "" if v is None else f"{v:.3f}"
+
+
+def emit(
+    name: str,
+    us_per_call: float,
+    derived: str,
+    *,
+    compile_ms: float | None = None,
+    steady_ms: float | None = None,
+    backend: str | None = None,
+    interpret: bool | None = None,
+) -> None:
+    if backend is None or interpret is None:
+        b, i = provenance()
+        backend = b if backend is None else backend
+        interpret = i if interpret is None else interpret
+    _rows.append((name, us_per_call, compile_ms, steady_ms, backend,
+                  bool(interpret), derived))
+    print(
+        f"{name},{us_per_call:.1f},{_fmt_ms(compile_ms)},{_fmt_ms(steady_ms)},"
+        f"{backend},{interpret},{derived}",
+        flush=True,
+    )
 
 
 def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)
     return out, (time.time() - t0) * 1e6
+
+
+def timed2(fn, *args, reps: int = 3, **kw):
+    """Time `fn` separating first-call (trace+compile) from steady state.
+
+    Returns ``(out, us_per_call, compile_ms, steady_ms)`` where
+    ``steady_ms`` is the best of `reps` warm calls, ``compile_ms`` is the
+    first-call excess over steady (clamped at 0 — pure-python callees pay
+    no compile), and ``us_per_call`` is the steady per-call time in us so
+    existing consumers of the second column keep their meaning.
+    """
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    first_ms = (time.perf_counter() - t0) * 1e3
+    steady_ms = first_ms
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        steady_ms = min(steady_ms, (time.perf_counter() - t0) * 1e3)
+    compile_ms = max(0.0, first_ms - steady_ms)
+    return out, steady_ms * 1e3, compile_ms, steady_ms
 
 
 def save_json(name: str, payload) -> Path:
@@ -54,6 +127,9 @@ def save_json(name: str, payload) -> Path:
 def flush_csv(name: str = "benchmarks") -> None:
     p = RESULTS / f"{name}.csv"
     with open(p, "w") as f:
-        f.write("name,us_per_call,derived\n")
+        f.write(CSV_HEADER + "\n")
         for r in _rows:
-            f.write(f"{r[0]},{r[1]:.1f},{r[2]}\n")
+            f.write(
+                f"{r[0]},{r[1]:.1f},{_fmt_ms(r[2])},{_fmt_ms(r[3])},"
+                f"{r[4]},{r[5]},{r[6]}\n"
+            )

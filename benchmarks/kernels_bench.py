@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from .common import emit, timed
+from .common import emit, timed, timed2
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -20,14 +20,16 @@ def flash_attention_bench():
     q = jnp.asarray(rng.normal(size=(B, Hq, S, d)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), jnp.float32)
-    out, us = timed(lambda: flash_attention(q, k, v, block_q=64, block_k=64)
-                    .block_until_ready())
+    out, us, c_ms, s_ms = timed2(
+        lambda: flash_attention(q, k, v, block_q=64, block_k=64)
+        .block_until_ready())
     flops = 4 * B * Hq * S * S * d          # 2 matmuls, fwd
     bytes_ = (q.size + k.size + v.size + out.size) * 4
     t_c, t_m = flops / PEAK_FLOPS, bytes_ / HBM_BW
     emit("kernel_flash_attention", us,
          f"tpu_compute_s={t_c:.2e};tpu_memory_s={t_m:.2e};"
-         f"bound={'compute' if t_c > t_m else 'memory'}")
+         f"bound={'compute' if t_c > t_m else 'memory'}",
+         compile_ms=c_ms, steady_ms=s_ms)
 
 
 def ssd_scan_bench():
@@ -39,7 +41,8 @@ def ssd_scan_bench():
     a = jnp.asarray(rng.uniform(0.8, 1.0, size=(B, S, H)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
     c = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
-    out, us = timed(lambda: ssd_scan(x, a, b, c, chunk=64).block_until_ready())
+    out, us, c_ms, s_ms = timed2(
+        lambda: ssd_scan(x, a, b, c, chunk=64).block_until_ready())
     L = 64
     nC = S // L
     flops = B * H * nC * (2 * L * L * N + 2 * L * L * P + 2 * L * N * P * 2)
@@ -47,7 +50,8 @@ def ssd_scan_bench():
     t_c, t_m = flops / PEAK_FLOPS, bytes_ / HBM_BW
     emit("kernel_ssd_scan", us,
          f"tpu_compute_s={t_c:.2e};tpu_memory_s={t_m:.2e};"
-         f"bound={'compute' if t_c > t_m else 'memory'}")
+         f"bound={'compute' if t_c > t_m else 'memory'}",
+         compile_ms=c_ms, steady_ms=s_ms)
 
 
 def coflow_merge_bench():
@@ -61,12 +65,13 @@ def coflow_merge_bench():
     ei = np.minimum(t1, K)
     s = rng.integers(0, m, E)
     r = rng.integers(0, m, E)
-    out, us = timed(interval_alphas, si, ei, s, r, K, m)
+    out, us, c_ms, s_ms = timed2(interval_alphas, si, ei, s, r, K, m)
     ports_pad = ((2 * m + 127) // 128) * 128
     bytes_ = K * ports_pad * 4 * 2          # read deltas + running counts
     t_m = bytes_ / HBM_BW
     emit("kernel_coflow_merge", us,
-         f"tpu_memory_s={t_m:.2e};bound=memory (one pass, ~2 ops/byte)")
+         f"tpu_memory_s={t_m:.2e};bound=memory (one pass, ~2 ops/byte)",
+         compile_ms=c_ms, steady_ms=s_ms)
 
 
 def backend_dispatch_bench():
@@ -85,11 +90,38 @@ def backend_dispatch_bench():
                           rng.integers(0, m, e).astype(np.int64))
     events = np.unique(np.concatenate([t0, t1]))
     a_np, us_np = timed(compute_alphas, events, edges, m, "numpy")
-    a_pl, us_pl = timed(compute_alphas, events, edges, m, "pallas")
+    a_pl, us_pl, c_ms, s_ms = timed2(compute_alphas, events, edges, m,
+                                     "pallas")
     assert np.array_equal(a_np, a_pl), "backend mismatch"
-    emit("backend_alphas_numpy", us_np, f"K={events.size - 1}")
+    emit("backend_alphas_numpy", us_np, f"K={events.size - 1}",
+         backend="alpha:numpy", interpret=False)
     emit("backend_alphas_pallas", us_pl,
-         "identical=True;note=interpret-mode timing, not TPU perf")
+         "identical=True;note=interpret-mode timing, not TPU perf",
+         compile_ms=c_ms, steady_ms=s_ms, backend="alpha:pallas")
+
+
+def merge_fix_bench():
+    """Fused merge_and_fix tail (kernels/merge_fix): alphas + expanded
+    interval durations in one device round-trip, against the numpy oracle
+    (bit-identical by construction)."""
+    from repro.kernels.merge_fix import merge_fix_step
+    from repro.kernels.merge_fix.ref import merge_fix_ref
+
+    rng = np.random.default_rng(0)
+    e, m = 3000, 64
+    t0 = rng.integers(0, 4000, e)
+    t1 = t0 + rng.integers(1, 128, e)
+    s = rng.integers(0, m, e)
+    r = rng.integers(0, m, e)
+    events = np.unique(np.concatenate([t0, t1]))
+    ref = merge_fix_ref(events, t0, t1, s, r, m)
+    (al, de), us, c_ms, s_ms = timed2(merge_fix_step, events, t0, t1, s, r, m)
+    assert np.array_equal(al, ref[0]) and np.array_equal(de, ref[1]), \
+        "merge_fix fused step diverged from oracle"
+    emit("kernel_merge_fix", us,
+         f"K={events.size - 1};identical=True;"
+         "note=interpret-mode timing, not TPU perf",
+         compile_ms=c_ms, steady_ms=s_ms)
 
 
 def cap_to_slack_bench():
@@ -261,19 +293,22 @@ def bna_batch_bench(fast: bool = True):
              f"scalar_est_us={us_scalar_est:.0f};"
              f"speedup={us_scalar_est / max(us_b, 1e-9):.1f}x;"
              f"w={w};identical=True"
-             + ("" if K == n_s else f";scalar_sampled_n={n_s}"))
+             + ("" if K == n_s else f";scalar_sampled_n={n_s}"),
+             backend="bna:numpy", interpret=False)
 
     demands = make(96)
     with backend.use_bna_backend("numpy"):
         ref = bna_many(demands)
     with backend.use_bna_backend("pallas"):
-        got, us_pl = timed(bna_many, demands)
+        got, us_pl, c_ms, s_ms = timed2(
+            lambda: (backend.clear_caches() or bna_many(demands)))
     for a, b in zip(got, ref):
         assert len(a) == len(b) and all(
             x == y and np.array_equal(p, q)
             for (x, p), (y, q) in zip(a, b)), "pallas bna_step diverged"
     emit("bna_batch_pallas", us_pl,
-         "identical=True;note=interpret-mode timing, not TPU perf")
+         "identical=True;note=interpret-mode timing, not TPU perf",
+         compile_ms=c_ms, steady_ms=s_ms, backend="bna:pallas")
 
 
 def bna_batch_planning_bench(fast: bool = True):
@@ -320,7 +355,7 @@ def bna_batch_planning_bench(fast: bool = True):
          f"off_us={best[False]:.0f};speedup={speedup:.2f}x;"
          f"meets_2x_target={speedup >= 2.0};"
          f"scenario={scen};m={built.instance.m};coflows={n_cof};"
-         f"identical=True")
+         f"identical=True", interpret=False)
 
 
 def run_bna_batch(fast: bool = True):
@@ -333,6 +368,7 @@ def run(fast: bool = True):
     ssd_scan_bench()
     coflow_merge_bench()
     backend_dispatch_bench()
+    merge_fix_bench()
     cap_to_slack_bench()
     backfill_executor_bench()
     engine_cache_bench()

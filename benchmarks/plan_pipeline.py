@@ -1,0 +1,136 @@
+"""Planning-pipeline A/B: python vs jitted path, cold-start wall per scenario.
+
+For every scenario in the matrix (fixed seeds) this measures the full
+``plan`` wall-clock with the G-DM scheduler under both plan backends:
+
+* ``python_us``   — best-of-N cold runs on the classic numpy path (all
+  result caches cleared before each run; this is the baseline "cold-start
+  planning wall" a fresh process pays per instance).
+* ``jit_cold_us`` — one run on the jitted pipeline with the compile cache
+  ALSO cleared: trace + XLA compile + execute.  This is the first-instance
+  cost of a fresh process without a persisted jax compilation cache.
+* ``jit_warm_us`` — best-of-N runs with result caches cleared but compiled
+  executables retained (the steady state of a long-lived scheduler process,
+  or any process with the jax compilation cache persisted — the CI job
+  keeps one).
+
+Plans must be bit-identical across backends (asserted on twct here; the
+full transcript-level grid lives in tests/test_pipeline.py).  Results land
+in ``benchmarks/results/BENCH_plan.json`` with per-scenario rows, the
+geomean warm speedup, and the headline wide_shallow/fb_like rows at
+m >= 50.  On a CPU-only container the pipeline runs through XLA's CPU
+backend — ``device`` records that; the >=10x cold-start targets are stated
+for TPU-attached runs, which is also the only configuration where
+``auto`` resolves to jit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import scenarios
+from repro.core import clear_caches, plan, use_plan_backend
+
+from . import common
+
+# (scenario, build overrides) — fixed seeds, one headline pair at m >= 50
+_FAST_CASES = [
+    ("wide_shallow", {"m": 50, "scale": 0.5}),
+    ("fb_like", {"m": 50, "scale": 0.1}),
+    ("incast", {"m": 16, "scale": 1.0}),
+    ("deep_chain", {"m": 12, "scale": 0.3}),
+]
+_FULL_CASES = _FAST_CASES + [
+    ("shuffle_heavy", {"m": 24, "scale": 0.2}),
+    ("alibaba_sparse", {"m": 24, "scale": 0.2}),
+    ("dist_collectives", {"m": 24, "scale": 0.2}),
+]
+_SEEDS = (0, 1)
+
+
+def _bench_case(scen: str, kw: dict, seed: int, reps: int) -> dict:
+    import jax
+
+    import repro.core.pipeline as pipeline
+
+    built = scenarios.build(scen, seed=seed, **kw)
+    row: dict = {"scenario": scen, "seed": seed, "m": built.instance.m,
+                 "jobs": len(built.instance.jobs), **kw}
+
+    with use_plan_backend("python"):
+        best = np.inf
+        for _ in range(reps):
+            clear_caches()
+            p, us = common.timed(plan, built.instance, "gdm", seed=seed)
+            best = min(best, us)
+        row["python_us"] = best
+        twct_py = p.twct()
+
+    with use_plan_backend("jit"):
+        pipeline.clear_pipeline_caches(compiled=True)
+        clear_caches()
+        p, us = common.timed(plan, built.instance, "gdm", seed=seed)
+        row["jit_cold_us"] = us
+        stats = pipeline.pipeline_stats()["compile"]
+        row["compile_ms"] = stats["compile_s"] * 1e3
+        row["compiles"] = stats["compiles"]
+        best = np.inf
+        for _ in range(reps):
+            clear_caches()  # result caches only; executables retained
+            p, us = common.timed(plan, built.instance, "gdm", seed=seed)
+            best = min(best, us)
+        row["jit_warm_us"] = best
+        assert p.twct() == twct_py, \
+            f"jit plan diverged on {scen} seed {seed}"
+
+    row["identical"] = True
+    row["speedup_cold"] = row["python_us"] / max(row["jit_cold_us"], 1e-9)
+    row["speedup_warm"] = row["python_us"] / max(row["jit_warm_us"], 1e-9)
+    row["device"] = jax.devices()[0].platform
+    return row
+
+
+def run(fast: bool = True) -> dict:
+    cases = _FAST_CASES if fast else _FULL_CASES
+    reps = 3 if fast else 2
+    rows = [_bench_case(scen, kw, seed, reps)
+            for scen, kw in cases for seed in _SEEDS]
+    warm = np.array([r["speedup_warm"] for r in rows])
+    cold = np.array([r["speedup_cold"] for r in rows])
+    headline = {
+        f"{r['scenario']}_m{r['m']}_seed{r['seed']}": round(r["speedup_warm"], 3)
+        for r in rows
+        if r["scenario"] in ("wide_shallow", "fb_like") and r["m"] >= 50
+    }
+    payload = {
+        "scheduler": "gdm",
+        "seeds": list(_SEEDS),
+        "device": rows[0]["device"],
+        "rows": rows,
+        "geomean_speedup_warm": float(np.exp(np.log(warm).mean())),
+        "geomean_speedup_cold": float(np.exp(np.log(cold).mean())),
+        "headline_warm_speedup_m50": headline,
+        "note": ("speedups are python_us / jit_*_us; >1 means jit faster. "
+                 "Targets (>=10x cold wide_shallow/fb_like at m>=50, >=2x "
+                 "geomean) apply to TPU-attached runs where auto resolves "
+                 "to jit; CPU rows record the XLA-CPU reality."),
+    }
+    common.save_json("BENCH_plan", payload)
+    for r in rows:
+        common.emit(
+            f"plan_pipeline_{r['scenario']}_m{r['m']}_s{r['seed']}",
+            r["jit_warm_us"],
+            f"python_us={r['python_us']:.0f};jit_cold_us={r['jit_cold_us']:.0f};"
+            f"speedup_warm={r['speedup_warm']:.2f}x;"
+            f"speedup_cold={r['speedup_cold']:.2f}x;"
+            f"compiles={r['compiles']};device={r['device']};identical=True",
+            compile_ms=r["compile_ms"],
+            steady_ms=r["jit_warm_us"] / 1e3,
+            backend="plan:python-vs-jit",
+        )
+    common.emit(
+        "plan_pipeline_geomean", 0.0,
+        f"warm={payload['geomean_speedup_warm']:.2f}x;"
+        f"cold={payload['geomean_speedup_cold']:.2f}x;"
+        f"cases={len(rows)};device={payload['device']}",
+        backend="plan:python-vs-jit")
+    return payload

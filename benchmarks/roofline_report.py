@@ -5,7 +5,15 @@ MODEL_FLOPS / HLO_FLOPs, and names the dominant bottleneck.
 
 Also carries the analytic TPU roofline for the ``bna_step`` matching kernel
 (`bna_batch_roofline`): per-step bytes/flops at batch sizes K -> 1e5,
-independent of dryrun.json."""
+independent of dryrun.json.
+
+Interpret-mode rows: when the kernels run under the Pallas interpreter
+(CPU emulation, no TPU attached) the measured wall times in
+``benchmarks.csv`` say nothing about hardware.  `flag_interpret_rows`
+scans the recorded rows and marks every measured kernel row whose
+``interpret`` column is true — those rows keep their analytic TPU terms in
+`derived` but are explicitly excluded from any measured-vs-roofline
+comparison."""
 from __future__ import annotations
 
 import json
@@ -123,7 +131,38 @@ def bna_batch_roofline(Ks=(1_000, 10_000, 100_000), w: int = 16) -> None:
         t_c, t_m = flops / PEAK_FLOPS, bytes_ / HBM_BW
         emit(f"roofline_bna_step_K{K}", 0.0,
              f"tpu_compute_s={t_c:.2e};tpu_memory_s={t_m:.2e};"
-             f"bound={'compute' if t_c > t_m else 'memory'};w={w}")
+             f"bound={'compute' if t_c > t_m else 'memory'};w={w};"
+             "analytic=True")
+    flag_interpret_rows()
+
+
+def flag_interpret_rows() -> list[str]:
+    """Mark measured kernel rows recorded under the Pallas interpreter.
+
+    Scans the rows emitted so far this run; every measured (non-analytic)
+    kernel row whose ``interpret`` provenance column is true gets
+    ``;interpret_only=True`` appended to its `derived` field, and one
+    summary row lists them.  Interpret wall times exercise semantics on
+    CPU — comparing them against the analytic TPU rooflines as if they
+    were hardware would be meaningless, so the report names them instead."""
+    from . import common
+
+    flagged = []
+    for i, r in enumerate(common._rows):
+        name, us, c_ms, s_ms, backend, interp, derived = r
+        if not interp or name.startswith("roofline_") or us == 0.0:
+            continue
+        if not (name.startswith("kernel_") or name.startswith("backend_")
+                or name.startswith("bna_batch")):
+            continue
+        if "interpret_only=True" not in derived:
+            common._rows[i] = (name, us, c_ms, s_ms, backend, interp,
+                               derived + ";interpret_only=True")
+        flagged.append(name)
+    emit("roofline_interpret_rows", 0.0,
+         ("none" if not flagged else ";".join(flagged))
+         + ";note=interpret timings excluded from roofline comparison")
+    return flagged
 
 
 def render(dryrun_path: Path | None = None) -> list[dict]:

@@ -1,5 +1,6 @@
 """Benchmark entry point — one function per paper table/figure plus the
-framework benchmarks. Prints ``name,us_per_call,derived`` CSV.
+framework benchmarks. Prints
+``name,us_per_call,compile_ms,steady_ms,backend,interpret,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run             # CI-sized (~15 min)
   PYTHONPATH=src python -m benchmarks.run --standard  # m up to 150 (~2 h)
@@ -27,7 +28,7 @@ def main() -> None:
                     help="published workload scale (longest)")
     ap.add_argument("--only", default=None,
                     help="comma list: figs,online,beta,rsd,planner,kernels,"
-                         "bna_batch,roofline,scenarios")
+                         "bna_batch,roofline,scenarios,plan_pipeline")
     ap.add_argument("--scenario", default=None,
                     help="comma list of scenario-registry keys for the "
                          "scenario x scheduler matrix (default: all "
@@ -40,6 +41,15 @@ def main() -> None:
                     choices=("auto", "numpy", "pallas"),
                     help="route the batched BNA step through this backend "
                          "(default: REPRO_BNA_BACKEND or auto)")
+    ap.add_argument("--plan-backend", default=None,
+                    choices=("auto", "python", "jit"),
+                    help="route the planning pipeline (order/decompose/"
+                         "merge_and_fix) through this backend "
+                         "(default: REPRO_PLAN_BACKEND or auto)")
+    ap.add_argument("--matrix-seeds", type=int, default=1,
+                    help="seeds per scenario in the scenario matrix; > 1 "
+                         "batches the decomposition prefetch across the "
+                         "whole seed set (one jit trace amortized)")
     ap.add_argument("--backfill-exec", default="packet",
                     choices=("packet", "ledger"),
                     help="backfill executor for the *_bf schedulers in the "
@@ -61,6 +71,9 @@ def main() -> None:
     if args.bna_backend:
         from repro.core import set_bna_backend
         set_bna_backend(args.bna_backend)
+    if args.plan_backend:
+        from repro.core import set_plan_backend
+        set_plan_backend(args.plan_backend)
 
     if args.fast:
         scale, seeds, ms, mus, factors = 0.12, 2, (10, 30, 50), (2, 5, 10), (2, 25)
@@ -72,12 +85,12 @@ def main() -> None:
             (2, 5, 10), (2, 10, 100)
 
     want = set((args.only or
-                "figs,online,beta,rsd,planner,kernels,roofline,scenarios")
-               .split(","))
+                "figs,online,beta,rsd,planner,kernels,roofline,scenarios,"
+                "plan_pipeline").split(","))
     if args.scenario:
         want.add("scenarios")
-    from . import (common, kernels_bench, paper_figs, planner_ab,
-                   roofline_report, scenario_matrix)
+    from . import (common, kernels_bench, paper_figs, plan_pipeline,
+                   planner_ab, roofline_report, scenario_matrix)
 
     if "figs" in want:
         paper_figs.workload_calibration(scale)
@@ -102,7 +115,9 @@ def main() -> None:
         scenario_matrix.run(
             args.scenario.split(",") if args.scenario else None,
             profile=profile, backfill_exec=args.backfill_exec,
-            driver=args.driver)
+            driver=args.driver, seeds=args.matrix_seeds)
+    if "plan_pipeline" in want:
+        plan_pipeline.run(fast=args.fast)
     if "planner" in want:
         planner_ab.run()
     if "kernels" in want:

@@ -41,10 +41,22 @@ variables, selects how the engine's two hot paths execute:
   same state is re-planned (algorithm A/B pairs on one instance, beta
   sweeps, and online reschedules whose surviving jobs are untouched).
 
+* **plan backend** — the whole-planning-path knob (``core/pipeline.py``):
+  ``"python"`` runs the classic per-coflow loop; ``"jit"`` routes the
+  per-instance prefetch, the per-coflow edge-interval construction, and the
+  Algorithm 5 ordering inputs through fixed-shape compiled XLA programs
+  (bit-identical plans — all-integer arithmetic); ``"auto"`` picks jit iff
+  a TPU backend is attached (on CPU the compile latency only pays off for
+  large instances, so it is opt-in there — same policy as the alpha/BNA
+  knobs).  A pipeline failure under ``auto`` falls back to the python path
+  with a one-time warning; an explicitly requested jit backend propagates
+  the error.
+
 Environment switches (read once at import; also settable in-process)::
 
     REPRO_ALPHA_BACKEND    auto | numpy | pallas      (default: auto)
     REPRO_BNA_BACKEND      auto | numpy | pallas      (default: auto)
+    REPRO_PLAN_BACKEND     auto | python | jit        (default: auto)
     REPRO_BNA_BATCH        1 | 0: instance-level batched BNA prefetch
                            (default: 1)
     REPRO_BNA_CACHE_SIZE   max cached decompositions  (default: 4096; 0 off)
@@ -53,6 +65,7 @@ Environment switches (read once at import; also settable in-process)::
 from __future__ import annotations
 
 import os
+import sys
 import warnings
 from collections import OrderedDict
 from contextlib import contextmanager
@@ -70,7 +83,14 @@ __all__ = [
     "set_bna_backend",
     "use_bna_backend",
     "resolve_bna_backend",
+    "set_plan_backend",
+    "use_plan_backend",
+    "resolve_plan_backend",
     "compute_alphas",
+    "fused_merge_fix",
+    "plan_edges",
+    "plan_order_loads",
+    "prefetch_plan",
     "bna_pieces",
     "bna_pieces_many",
     "prefetch_bna",
@@ -81,6 +101,7 @@ __all__ = [
 
 _ALPHA_BACKENDS = ("auto", "numpy", "pallas")
 _BNA_BACKENDS = ("auto", "numpy", "pallas")
+_PLAN_BACKENDS = ("auto", "python", "jit")
 
 
 @dataclass
@@ -89,6 +110,7 @@ class BackendConfig:
 
     alpha_backend: str = "auto"
     bna_backend: str = "auto"
+    plan_backend: str = "auto"
     bna_batch: bool = True
     bna_cache_size: int = 4096
     order_cache_size: int = 256
@@ -98,6 +120,7 @@ class BackendConfig:
         cfg = BackendConfig(
             alpha_backend=os.environ.get("REPRO_ALPHA_BACKEND", "auto").lower(),
             bna_backend=os.environ.get("REPRO_BNA_BACKEND", "auto").lower(),
+            plan_backend=os.environ.get("REPRO_PLAN_BACKEND", "auto").lower(),
             bna_batch=os.environ.get("REPRO_BNA_BATCH", "1") != "0",
             bna_cache_size=int(os.environ.get("REPRO_BNA_CACHE_SIZE", "4096")),
             order_cache_size=int(os.environ.get("REPRO_ORDER_CACHE_SIZE", "256")),
@@ -110,6 +133,10 @@ class BackendConfig:
             raise ValueError(
                 f"REPRO_BNA_BACKEND={cfg.bna_backend!r}; "
                 f"expected one of {_BNA_BACKENDS}")
+        if cfg.plan_backend not in _PLAN_BACKENDS:
+            raise ValueError(
+                f"REPRO_PLAN_BACKEND={cfg.plan_backend!r}; "
+                f"expected one of {_PLAN_BACKENDS}")
         return cfg
 
 
@@ -175,6 +202,37 @@ def resolve_bna_backend(force: str | None = None) -> str:
     return _resolve_auto() if name == "auto" else name
 
 
+def set_plan_backend(name: str) -> None:
+    """One-line switch: route whole-instance planning through `name`."""
+    if name not in _PLAN_BACKENDS:
+        raise ValueError(f"unknown plan backend {name!r}; "
+                         f"expected one of {_PLAN_BACKENDS}")
+    config.plan_backend = name
+
+
+@contextmanager
+def use_plan_backend(name: str):
+    prev = config.plan_backend
+    set_plan_backend(name)
+    try:
+        yield
+    finally:
+        config.plan_backend = prev
+
+
+def resolve_plan_backend(force: str | None = None) -> str:
+    """Concrete plan backend for this call: "auto" picks jit iff a TPU is
+    attached (CPU compile latency only pays off for large instances, so jit
+    is opt-in there — exactly the alpha/BNA auto policy)."""
+    name = force or config.plan_backend
+    if name not in _PLAN_BACKENDS:
+        raise ValueError(f"unknown plan backend {name!r}; "
+                         f"expected one of {_PLAN_BACKENDS}")
+    if name == "auto":
+        return "jit" if _resolve_auto() == "pallas" else "python"
+    return name
+
+
 _warned_fallback = False
 
 
@@ -213,6 +271,101 @@ def compute_alphas(events: np.ndarray, edges, m: int,
                     "auto-dispatch falling back to the numpy oracle",
                     RuntimeWarning)
     return _alphas_vectorized(events, edges, m)
+
+
+# --------------------------------------------------------------------------
+# jit planning pipeline dispatch (REPRO_PLAN_BACKEND; see core/pipeline.py)
+# --------------------------------------------------------------------------
+
+_warned_plan_fallback = False
+
+
+def _plan_fallback(exc: Exception) -> None:
+    """Auto falls back to the python plan path (warned once); an explicitly
+    requested jit backend propagates the error — mirroring the kernel
+    knobs, so equivalence tests cannot silently pass on the python path."""
+    global _warned_plan_fallback
+    if config.plan_backend == "jit":
+        raise exc
+    if not _warned_plan_fallback:
+        _warned_plan_fallback = True
+        warnings.warn(
+            f"jit planning pipeline failed ({exc!r}); auto-dispatch "
+            "falling back to the python plan path", RuntimeWarning)
+
+
+def prefetch_plan(demands: "Iterable[np.ndarray]") -> None:
+    """Instance-level prefetch dispatched on the plan backend: under jit it
+    warms the BNA *and* edge-interval caches through the compiled
+    width-bucketed sweep (pipeline.prefetch_demands); otherwise — or on an
+    auto-mode pipeline failure — it is exactly :func:`prefetch_bna`."""
+    ds = list(demands)
+    if resolve_plan_backend() == "jit":
+        try:
+            from . import pipeline
+
+            pipeline.prefetch_demands(ds)
+            return
+        except Exception as exc:  # pragma: no cover - env-dependent
+            _plan_fallback(exc)
+    prefetch_bna(ds)
+
+
+def plan_edges(demand: np.ndarray):
+    """Relative (t0, t1, s, r) edge intervals of one coflow's BNA schedule
+    under the jit plan backend; None routes the caller to the python path
+    (backend resolves python, or auto-mode pipeline failure)."""
+    if resolve_plan_backend() != "jit":
+        return None
+    try:
+        from . import pipeline
+
+        return pipeline.coflow_edges_rel(demand)
+    except Exception as exc:  # pragma: no cover - env-dependent
+        _plan_fallback(exc)
+        return None
+
+
+def plan_order_loads(instance):
+    """Algorithm 5 load vectors from the jitted segment-sum (bit-identical
+    integer sums); None routes the caller to the host computation."""
+    if resolve_plan_backend() != "jit":
+        return None
+    try:
+        from . import pipeline
+
+        return pipeline.instance_load_vectors(instance)
+    except Exception as exc:  # pragma: no cover - env-dependent
+        _plan_fallback(exc)
+        return None
+
+
+def fused_merge_fix(events: np.ndarray, edges, m: int,
+                    force: str | None = None):
+    """(alphas, expansion deltas) in one compiled call via the
+    ``kernels/merge_fix`` fused step — engaged only when the plan backend
+    resolves jit AND the alpha backend resolves pallas (on CPU the numpy
+    oracle stays the better default).  None → the caller runs the classic
+    two-stage path.  Bit-identical: same kernel alphas, integer deltas."""
+    if resolve_plan_backend() != "jit":
+        return None
+    requested = force or config.alpha_backend
+    if resolve_alpha_backend(force) != "pallas":
+        return None
+    if not (edges.size and events.size > 1):
+        return None
+    try:
+        from repro.kernels.merge_fix.ops import merge_fix_step
+
+        alphas, deltas = merge_fix_step(events, edges.t0, edges.t1,
+                                        edges.s, edges.r, m)
+        return (np.asarray(alphas, dtype=np.int64),
+                np.asarray(deltas, dtype=np.int64))
+    except Exception as exc:  # pragma: no cover - env-dependent
+        if requested == "pallas":
+            raise
+        _plan_fallback(exc)
+        return None
 
 
 # --------------------------------------------------------------------------
@@ -369,8 +522,11 @@ def prefetch_bna(demands: "Iterable[np.ndarray]") -> None:
 
 
 def cache_stats() -> dict:
-    return {"bna": {**bna_cache.stats(), "batch": dict(_bna_batch)},
-            "order": order_cache.stats()}
+    stats = {"bna": {**bna_cache.stats(), "batch": dict(_bna_batch)},
+             "order": order_cache.stats()}
+    if "repro.core.pipeline" in sys.modules:
+        stats["plan"] = sys.modules["repro.core.pipeline"].pipeline_stats()
+    return stats
 
 
 def clear_caches() -> None:
@@ -378,16 +534,30 @@ def clear_caches() -> None:
     order_cache.clear()
     for k in _bna_batch:
         _bna_batch[k] = 0
+    if "repro.core.pipeline" in sys.modules:
+        # result caches only; compiled executables are data-independent
+        sys.modules["repro.core.pipeline"].clear_pipeline_caches()
 
 
 @contextmanager
 def no_caches():
-    """Disable (and clear) both caches — the from-scratch comparator."""
+    """Disable (and clear) the result caches — the from-scratch comparator.
+    Covers the jit pipeline's edge cache too (compiled executables stay:
+    they are data-independent, caching them is not a result memo)."""
     prev = (config.bna_cache_size, config.order_cache_size)
     saved_bna = (bna_cache.maxsize, dict(bna_cache._od),
                  bna_cache.hits, bna_cache.misses)
     saved_ord = (order_cache.maxsize, dict(order_cache._od),
                  order_cache.hits, order_cache.misses)
+    edge_cache = None
+    if "repro.core.pipeline" in sys.modules:
+        edge_cache = sys.modules["repro.core.pipeline"].edge_cache
+    saved_edge = None
+    if edge_cache is not None:
+        saved_edge = (edge_cache.maxsize, dict(edge_cache._od),
+                      edge_cache.hits, edge_cache.misses)
+        edge_cache.clear()
+        edge_cache.maxsize = 0
     config.bna_cache_size = 0
     config.order_cache_size = 0
     bna_cache.clear()
@@ -404,3 +574,7 @@ def no_caches():
         order_cache.maxsize = saved_ord[0]
         order_cache._od = OrderedDict(saved_ord[1])
         order_cache.hits, order_cache.misses = saved_ord[2], saved_ord[3]
+        if edge_cache is not None:
+            edge_cache.maxsize = saved_edge[0]
+            edge_cache._od = OrderedDict(saved_edge[1])
+            edge_cache.hits, edge_cache.misses = saved_edge[2], saved_edge[3]

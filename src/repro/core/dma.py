@@ -11,13 +11,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from .backend import bna_pieces
+from .backend import bna_pieces, plan_edges
 from .timeline import (EdgeIntervals, FinalSchedule, UnitSchedule,
-                       merge_and_fix, unit_from_coflow_plan)
+                       merge_and_fix, unit_from_coflow_edges,
+                       unit_from_coflow_plan)
 from .types import Coflow, Job, aggregate_size, topological_order
 
 __all__ = ["isolated_job_unit", "draw_delays", "dma", "cached_bna",
-           "check_delays_mode"]
+           "coflow_unit", "check_delays_mode"]
 
 _DELAY_MODES = ("random", "spread")
 
@@ -45,6 +46,19 @@ def cached_bna(c: Coflow) -> list:
     return bna_pieces(c.demand)
 
 
+def coflow_unit(jid: int, cid: int, demand: np.ndarray,
+                start: int) -> UnitSchedule:
+    """UnitSchedule for one coflow, via whichever plan backend is active:
+    the jit pipeline serves cached start-relative edge intervals
+    (backend.plan_edges → core/pipeline.py, bit-identical to the python
+    RLE); otherwise BNA pieces are fetched through cached_bna and
+    RLE-compressed per call."""
+    rel = plan_edges(demand)
+    if rel is not None:
+        return unit_from_coflow_edges(jid, cid, demand, rel, start)
+    return unit_from_coflow_plan(jid, cid, demand, bna_pieces(demand), start)
+
+
 def isolated_job_unit(job: Job, start: int = 0) -> UnitSchedule:
     """Step 1: feasible isolated schedule — coflows back-to-back in
     topological order, each scheduled optimally by BNA (Lemma 1)."""
@@ -53,8 +67,7 @@ def isolated_job_unit(job: Job, start: int = 0) -> UnitSchedule:
     parts: list[UnitSchedule] = []
     for cid in order:
         c = job.coflows[cid]
-        pieces = cached_bna(c)
-        u = unit_from_coflow_plan(job.jid, cid, c.demand, pieces, t)
+        u = coflow_unit(job.jid, cid, c.demand, t)
         parts.append(u)
         t += c.D
     edges = EdgeIntervals.concat([p.edges for p in parts]).with_owner(job.jid)

@@ -19,8 +19,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .dma import cached_bna, check_delays_mode, draw_delays
-from .timeline import FinalSchedule, UnitSchedule, merge_and_fix, unit_from_coflow_plan
+from .dma import check_delays_mode, coflow_unit, draw_delays
+from .timeline import FinalSchedule, UnitSchedule, merge_and_fix
 from .types import (Job, aggregate_size, children_of, coflow_layers,
                     is_rooted_forest, parents_of)
 
@@ -131,8 +131,7 @@ def dma_srt(
                              require_tree=require_tree)
     units: list[UnitSchedule] = []
     for cid, c in enumerate(job.coflows):
-        pieces = cached_bna(c)
-        units.append(unit_from_coflow_plan(job.jid, cid, c.demand, pieces, starts[cid]))
+        units.append(coflow_unit(job.jid, cid, c.demand, starts[cid]))
         units[-1].uid = cid
     return merge_and_fix(units, m, origin=origin, decompose=decompose,
                          use_kernel=use_kernel)
@@ -172,14 +171,13 @@ def dma_rt(
             for j in jobs
         ]
     else:
-        from .timeline import EdgeIntervals, unit_from_coflow_plan
+        from .timeline import EdgeIntervals
         units = []
         for j in jobs:
             starts = srt_start_times(j, beta,
                                      None if delays == "spread" else rng,
                                      require_tree=require_tree)
-            parts = [unit_from_coflow_plan(j.jid, cid, c.demand,
-                                           cached_bna(c), starts[cid])
+            parts = [coflow_unit(j.jid, cid, c.demand, starts[cid])
                      for cid, c in enumerate(j.coflows)]
             edges = EdgeIntervals.concat([p.edges for p in parts]).with_owner(j.jid)
             units.append(UnitSchedule(

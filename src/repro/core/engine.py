@@ -211,12 +211,13 @@ class _Registered:
     opts: dict = field(default_factory=dict)
 
     def plan_full(self, instance: Instance) -> PlanResult:
-        # instance-level BNA prefetch: one batched bna_pieces_many call
-        # warms the cache for every coflow BEFORE the factory's
+        # instance-level plan prefetch: one batched decomposition call
+        # (jit pipeline or bna_pieces_many, per REPRO_PLAN_BACKEND) warms
+        # the caches for every coflow BEFORE the factory's
         # isolated_job_unit / dma_srt walk jobs one at a time (no-op when
         # batching or the cache is off; results-identical either way)
-        backend.prefetch_bna(c.demand for j in instance.jobs
-                             for c in j.coflows)
+        backend.prefetch_plan(c.demand for j in instance.jobs
+                              for c in j.coflows)
         return PlanResult(self.name,
                           _REGISTRY[self.name].factory(instance, **self.opts))
 

@@ -33,16 +33,31 @@ def group_jobs(instance: Instance, order: list[int]) -> list[list[int]]:
 
     Returns groups as lists of job ids, in increasing b; empty groups are
     dropped (they contribute nothing to the schedule)."""
+    from . import backend
+
     by_id = {j.jid: j for j in instance.jobs}
     m = instance.m
     gamma = instance.gamma()
-    agg = np.zeros((m, m), dtype=np.int64)
     keys: dict[int, float] = {}
-    for jid in order:
-        job = by_id[jid]
-        agg += job.aggregate_demand()
-        D_j = effective_size(agg)
-        keys[jid] = job.T + job.release + D_j
+    loads = backend.plan_order_loads(instance)
+    if loads is not None:
+        # effective_size of a prefix aggregate = max port load of the
+        # prefix = max over 2m ports of the cumsum of per-job load
+        # vectors (row sums commute with prefix sums) — no (m, m)
+        # accumulation needed.  Exact: float64 holds the integer loads.
+        row = {j.jid: k for k, j in enumerate(instance.jobs)}
+        cum = np.cumsum(loads[[row[jid] for jid in order]], axis=0)
+        D = cum.max(axis=1)
+        for i, jid in enumerate(order):
+            job = by_id[jid]
+            keys[jid] = job.T + job.release + int(D[i])
+    else:
+        agg = np.zeros((m, m), dtype=np.int64)
+        for jid in order:
+            job = by_id[jid]
+            agg += job.aggregate_demand()
+            D_j = effective_size(agg)
+            keys[jid] = job.T + job.release + D_j
     groups: dict[int, list[int]] = {}
     for jid in order:
         key = keys[jid]

@@ -39,6 +39,12 @@ pallas iff a TPU is attached.  The two are bit-identical (integer
 arithmetic, same formulas); a kernel failure under ``auto`` falls back to
 numpy with a one-time warning, an explicitly requested pallas backend
 propagates the error.
+
+The jit planning pipeline (``core/pipeline.py``, ``REPRO_PLAN_BACKEND``)
+reuses this module's support-restrict/bucket/pack machinery and
+``_bna_core_batch`` as its python fallback; its compiled decomposition is a
+jnp mirror of :func:`bna_step_inplace` plus a vmapped repair, proven (and
+tested) to produce the same per-lane step sequences.
 """
 from __future__ import annotations
 

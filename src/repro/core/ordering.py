@@ -41,13 +41,16 @@ def job_load_vectors(jobs: list[Job], m: int) -> np.ndarray:
     return d
 
 
-def job_order(instance: Instance) -> OrderResult:
+def job_order(instance: Instance, loads: np.ndarray | None = None) -> OrderResult:
+    """loads: optional precomputed job_load_vectors (n, 2m) float64 — the
+    jit pipeline supplies these from one batched segment-sum (exact integer
+    arithmetic below 2^53, so identical to the python loop)."""
     jobs = instance.jobs
     n = len(jobs)
     m = instance.m
     if n == 0:
         return OrderResult([], {}, [], {})
-    d = job_load_vectors(jobs, m)            # (n, 2m)
+    d = loads if loads is not None else job_load_vectors(jobs, m)  # (n, 2m)
     key = np.array([j.T + j.release for j in jobs], dtype=np.float64)
     wres = np.array([j.weight for j in jobs], dtype=np.float64)
     alive = np.ones(n, dtype=bool)
@@ -109,7 +112,7 @@ def cached_job_order(instance: Instance) -> OrderResult:
     key = instance_signature(instance)
     found, res = backend.order_cache.lookup(key)
     if not found:
-        res = job_order(instance)
+        res = job_order(instance, loads=backend.plan_order_loads(instance))
         backend.order_cache.store(key, res)
     return OrderResult(list(res.order), dict(res.eta), list(res.lambdas),
                        dict(res.residual))

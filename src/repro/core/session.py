@@ -54,9 +54,10 @@ partially-executed coflows — everything else falls back to the full replan
 counts, the repair hit rate, and warm-replan wall-clock are reported in
 :class:`SessionStats` alongside the engine's BNA/order cache stats.
 
-Engine-backed planning events prefetch the whole residual instance's BNA
-decompositions in one batched ``bna_pieces_many`` call
-(``backend.prefetch_bna``, issued inside ``plan_full``) before the
+Engine-backed planning events prefetch the whole residual instance's
+decompositions in one batched call — ``backend.prefetch_plan``, issued
+inside ``plan_full``; it dispatches to the jit planning pipeline or to
+``bna_pieces_many`` per ``REPRO_PLAN_BACKEND`` — before the
 scheduler walks jobs one by one — the engine's instance-level batching
 (see ``core/matching.py``); the repair path prefetches the newly-arrived
 jobs the same way.  Plain-callable schedulers are left unprefetched (the
@@ -703,8 +704,8 @@ class SchedulerSession:
         units = []
         from . import backend
 
-        backend.prefetch_bna(c.demand for jid in order[n_old:]
-                             for c in by_jid[jid].coflows)
+        backend.prefetch_plan(c.demand for jid in order[n_old:]
+                              for c in by_jid[jid].coflows)
         for jid in order[n_old:]:
             job = by_jid[jid]
             units.append(isolated_job_unit(job, start=t_new))

@@ -177,23 +177,51 @@ def bna_pieces_to_edge_intervals(
     )
 
 
+def _coflow_entry(jid: int, cid: int, demand: np.ndarray,
+                  start: int) -> LedgerEntry:
+    """Ledger entry for one coflow occupying [start, start + D)."""
+    from .types import effective_size
+
+    D = effective_size(demand)
+    s_idx, r_idx = np.nonzero(demand)
+    return LedgerEntry(
+        jid=jid, cid=cid, t0=start, t1=start + D,
+        srcs=s_idx.astype(np.int64), dsts=r_idx.astype(np.int64),
+        units=demand[s_idx, r_idx].astype(np.float64),
+    )
+
+
 def unit_from_coflow_plan(
     jid: int, cid: int, demand: np.ndarray,
     pieces: list[tuple[int, np.ndarray]], start: int,
 ) -> UnitSchedule:
     """UnitSchedule for one coflow scheduled by BNA starting at `start`."""
-    from .types import effective_size
-
-    D = effective_size(demand)
     edges = bna_pieces_to_edge_intervals(pieces, start, owner=cid,
                                          jid=jid, cid=cid)
-    s_idx, r_idx = np.nonzero(demand)
-    entry = LedgerEntry(
-        jid=jid, cid=cid, t0=start, t1=start + D,
-        srcs=s_idx.astype(np.int64), dsts=r_idx.astype(np.int64),
-        units=demand[s_idx, r_idx].astype(np.float64),
+    return UnitSchedule(uid=jid, edges=edges,
+                        ledger=[_coflow_entry(jid, cid, demand, start)])
+
+
+def unit_from_coflow_edges(
+    jid: int, cid: int, demand: np.ndarray,
+    rel: tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray], start: int,
+) -> UnitSchedule:
+    """unit_from_coflow_plan from precomputed start-relative edge intervals
+    ``(t0, t1, s, r)`` — the jit planning pipeline's cached representation
+    (core/pipeline.py).  Equivalent to RLE-compressing the BNA pieces."""
+    t0, t1, s, r = rel
+    n = t0.size
+    edges = EdgeIntervals(
+        t0.astype(np.int64) + int(start),
+        t1.astype(np.int64) + int(start),
+        s.astype(np.int64),
+        r.astype(np.int64),
+        np.full(n, cid, dtype=np.int64),
+        np.full(n, jid, dtype=np.int64),
+        np.full(n, cid, dtype=np.int64),
     )
-    return UnitSchedule(uid=jid, edges=edges, ledger=[entry])
+    return UnitSchedule(uid=jid, edges=edges,
+                        ledger=[_coflow_entry(jid, cid, demand, start)])
 
 
 @dataclass
@@ -479,7 +507,7 @@ def merge_and_fix(
       True forces the coflow_merge Pallas kernel (interpret mode on CPU);
       False forces the numpy oracle.
     """
-    from .backend import compute_alphas
+    from .backend import compute_alphas, fused_merge_fix
 
     delays = delays or {}
     shifted: list[EdgeIntervals] = []
@@ -494,12 +522,17 @@ def merge_and_fix(
         events = np.zeros(0, dtype=np.int64)
 
     force = None if use_kernel is None else ("pallas" if use_kernel else "numpy")
-    alphas = compute_alphas(events, edges, m, force=force)
-
-    K = alphas.size
-    lens = (events[1:] - events[:-1]) if K else np.zeros(0, dtype=np.int64)
-    rates = np.maximum(alphas, 1)
-    exp = np.concatenate([[0], np.cumsum(lens * rates)]).astype(np.float64)
+    fused = fused_merge_fix(events, edges, m, force=force)
+    if fused is not None:
+        alphas, deltas = fused
+        K = alphas.size
+        exp = np.concatenate([[0], np.cumsum(deltas)]).astype(np.float64)
+    else:
+        alphas = compute_alphas(events, edges, m, force=force)
+        K = alphas.size
+        lens = (events[1:] - events[:-1]) if K else np.zeros(0, dtype=np.int64)
+        rates = np.maximum(alphas, 1)
+        exp = np.concatenate([[0], np.cumsum(lens * rates)]).astype(np.float64)
     # anchor: relative time 0 corresponds to `origin`; the idle lead-in up
     # to the first event passes at rate 1 (delays / release waits are real)
     exp += origin + (float(events[0]) if K else 0.0)

@@ -1,0 +1,1 @@
+from .ops import merge_fix_step  # noqa: F401

@@ -1,0 +1,32 @@
+"""Numpy oracle for merge_fix: the classic merge_and_fix tail — alphas from
+edge activations, then per-interval expanded durations ``len * max(alpha, 1)``
+(Lemma 6).  The fused step in ops.py must match this exactly."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def merge_fix_ref(
+    events: np.ndarray,  # (K+1,) sorted unique interval boundaries
+    t0: np.ndarray,      # (E,) edge activation start times
+    t1: np.ndarray,      # (E,) edge activation end times (exclusive)
+    s: np.ndarray,       # (E,) sender port
+    r: np.ndarray,       # (E,) receiver port
+    m: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (alphas (K,) int64, deltas (K,) int64) — deltas are the
+    expanded interval durations ``(events[i+1]-events[i]) * max(alpha_i, 1)``
+    whose cumsum is merge_and_fix's ``exp`` (before the origin shift)."""
+    K = int(events.size) - 1
+    if K < 1:
+        return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)
+    si = np.searchsorted(events, t0)
+    ei = np.searchsorted(events, t1)
+    counts = np.zeros((K + 1, 2 * m), dtype=np.int64)
+    np.add.at(counts, (si, s), 1)
+    np.add.at(counts, (ei, s), -1)
+    np.add.at(counts, (si, m + r), 1)
+    np.add.at(counts, (ei, m + r), -1)
+    alphas = np.cumsum(counts[:K], axis=0).max(axis=1).astype(np.int64)
+    lens = (events[1:] - events[:-1]).astype(np.int64)
+    return alphas, lens * np.maximum(alphas, 1)

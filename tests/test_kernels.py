@@ -140,3 +140,44 @@ def test_bna_step_int32_guard():
     match = np.full((1, 2), -1, np.int64)
     with pytest.raises(ValueError, match="int32"):
         bna_step_batch(d, row, col, D, match)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_merge_fix_step_matches_ref(seed):
+    from repro.kernels.merge_fix import merge_fix_step
+    from repro.kernels.merge_fix.ref import merge_fix_ref
+
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 30))
+    E = int(rng.integers(1, 400))
+    t0 = rng.integers(0, 250, E)
+    t1 = t0 + rng.integers(1, 50, E)
+    s = rng.integers(0, m, E)
+    r = rng.integers(0, m, E)
+    events = np.unique(np.concatenate([t0, t1]))
+    for use_kernel in (True, False):
+        al, de = merge_fix_step(events, t0, t1, s, r, m,
+                                use_kernel=use_kernel, block_k=64)
+        ral, rde = merge_fix_ref(events, t0, t1, s, r, m)
+        assert np.array_equal(al, ral) and np.array_equal(de, rde), \
+            f"merge_fix diverged (m={m}, E={E}, kernel={use_kernel})"
+
+
+def test_merge_fix_step_empty_and_int64_lens():
+    from repro.kernels.merge_fix import merge_fix_step
+    from repro.kernels.merge_fix.ref import merge_fix_ref
+
+    z = np.zeros(0, np.int64)
+    al, de = merge_fix_step(np.array([0], np.int64), z, z, z, z, 4)
+    assert al.size == 0 and de.size == 0
+    # interval lengths too big for the in-graph int32 product: the host
+    # int64 fallback must still match the oracle exactly
+    t0 = np.array([0, 0], np.int64)
+    t1 = np.array([2**33, 2**32], np.int64)
+    s = np.array([0, 1], np.int64)
+    r = np.array([1, 0], np.int64)
+    events = np.unique(np.concatenate([t0, t1]))
+    al, de = merge_fix_step(events, t0, t1, s, r, 2)
+    ral, rde = merge_fix_ref(events, t0, t1, s, r, 2)
+    assert np.array_equal(al, ral) and np.array_equal(de, rde)
+    assert de.dtype == np.int64 and de.max() > 2**31
