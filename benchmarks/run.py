@@ -28,7 +28,7 @@ def main() -> None:
                     help="published workload scale (longest)")
     ap.add_argument("--only", default=None,
                     help="comma list: figs,online,beta,rsd,planner,kernels,"
-                         "bna_batch,roofline,scenarios,plan_pipeline")
+                         "bna_batch,roofline,scenarios,plan_pipeline,serve")
     ap.add_argument("--scenario", default=None,
                     help="comma list of scenario-registry keys for the "
                          "scenario x scheduler matrix (default: all "
@@ -86,11 +86,12 @@ def main() -> None:
 
     want = set((args.only or
                 "figs,online,beta,rsd,planner,kernels,roofline,scenarios,"
-                "plan_pipeline").split(","))
+                "plan_pipeline,serve").split(","))
     if args.scenario:
         want.add("scenarios")
     from . import (common, kernels_bench, paper_figs, plan_pipeline,
-                   planner_ab, roofline_report, scenario_matrix)
+                   planner_ab, roofline_report, scenario_matrix,
+                   serve_stream)
 
     if "figs" in want:
         paper_figs.workload_calibration(scale)
@@ -118,6 +119,8 @@ def main() -> None:
             driver=args.driver, seeds=args.matrix_seeds)
     if "plan_pipeline" in want:
         plan_pipeline.run(fast=args.fast)
+    if "serve" in want:
+        serve_stream.run(fast=args.fast)
     if "planner" in want:
         planner_ab.run()
     if "kernels" in want:

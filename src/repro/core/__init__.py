@@ -21,8 +21,10 @@ from .gap_instance import (gap_bounds, gap_hand_schedule, gap_instance,
                            gap_optimal_schedule_length)
 from .gdm import gdm, group_jobs
 from .online import OnlineResult, simulate_online
-from .session import (Frontier, SchedulerSession, SessionSnapshot,
-                      SessionStats)
+from .session import (AdmissionPolicy, Frontier, SchedulerSession,
+                      SessionSnapshot, SessionStats)
+from .stream import (StreamDriver, StreamResult, arrival_times, run_stream,
+                     stream_jobs)
 from .ordering import OrderResult, cached_job_order, job_order
 from .result import CompositeSchedule, Transcript, twct
 from .simulator import verify_schedule, verify_transcript

@@ -42,17 +42,48 @@ job-sequential ``om_alg`` scheduler with:
   effective-size windows in topological order — this check is what makes
   the path self-verifying rather than trusted).
 
-Spread-mode G-DM (``SchedulerSession(m, "gdm", delays="spread")``) also
-attempts the fast path: its delays are deterministic, and whenever the
-geometric grouping of the residual instance is singleton (every group one
-job — checked explicitly against ``group_jobs``), each group is exactly an
-isolated job schedule, so the plan coincides with the job-sequential
-O(m)Alg layout and the same window checks certify the splice.  Randomized
-G-DM, non-singleton groupings, interleaving plans, mid-window arrivals,
-partially-executed coflows — everything else falls back to the full replan
-(the checks above are evaluated, and a failure rejects).  Repair/replan
-counts, the repair hit rate, and warm-replan wall-clock are reported in
-:class:`SessionStats` alongside the engine's BNA/order cache stats.
+Spread-mode G-DM and G-DM-RT (``delays="spread"``) take a group-aware
+variant of the fast path: their delays are deterministic (zero rng draws),
+so a DMA/DMA-SRT group layout is a pure function of the group's member
+jobs and residual demands, and it is translation invariant —
+``dma(jobs, origin=o)`` is ``dma(jobs, origin=0)`` slid by ``o``.  The
+repair therefore re-derives the Algorithm 5 order and geometric grouping
+of the residual instance and walks the replan's group chain: a retained
+group whose membership matches an old group verbatim, whose residuals are
+bit-equal to the plan-time snapshot, and whose old expansion part sits
+exactly at the chain position a replan would assign (``origin == tau +
+cursor``) is **reused as one block** (``FinalSchedule.shifted_expanded``)
+— including non-singleton and expanded (alpha > 1) groups, which the
+previous singleton-only check always rejected; every other group (the
+in-flight group an arrival interrupted, groups whose membership changed,
+groups holding new jobs) is recomputed with the exact ``gdm()``
+construction for that scheduler — ``dma`` for G-DM, ``dma_rt`` (including
+its forest/start-after-parents fallback) for G-DM-RT.  The result is
+bit-identical to the full replan by construction; the repair is counted
+as a hit when at least one block was reused, and per-group reuse counts
+land in ``SessionStats.groups_reused`` / ``groups_replanned``.  Randomized
+G-DM/G-DM-RT always fall back (their delays re-draw per plan).
+Repair/replan counts, the repair hit rate, and warm-replan wall-clock are
+reported in :class:`SessionStats` alongside the engine's BNA/order cache
+stats.  ``repair="legacy"`` keeps the pre-generalization gate (om_alg +
+singleton spread-mode G-DM, whole plan untouched) for before/after
+hit-rate comparisons — ``benchmarks/serve_stream.py`` reports the delta.
+
+Backpressure (sustained arrivals)
+---------------------------------
+Under sustained arrivals, full replans are the expensive event: when too
+many recent reschedules missed the repair path, a serving layer should
+stop admitting work mid-window and wait for a clean cut.  The session
+tracks exactly that signal: ``replan_debt`` is the full-replan fraction
+over a sliding window of recent reschedules, and with an
+:class:`AdmissionPolicy` attached, :meth:`SchedulerSession.backpressure`
+turns on once the debt exceeds ``replan_budget`` (after ``window // 2``
+reschedules of warm-up).  The policy also carries ``max_pending``, the
+bound on the *caller's* deferred-arrivals queue — ``core.stream`` defers
+arrivals to the next planned completion boundary while backpressure holds
+and rejects beyond the bound, and ``serve.engine`` holds its admission
+queue under the same signal; deferral/reject counts are surfaced in
+``SessionStats.admission_deferred`` / ``admission_rejects``.
 
 Engine-backed planning events prefetch the whole residual instance's
 decompositions in one batched call — ``backend.prefetch_plan``, issued
@@ -76,6 +107,7 @@ from .result import CompositeSchedule, Transcript
 from .types import Coflow, Instance, Job, effective_size, topological_order
 
 __all__ = [
+    "AdmissionPolicy",
     "SchedulerSession",
     "SessionStats",
     "Frontier",
@@ -166,6 +198,34 @@ def execute_transcript(
 # public session state views
 # --------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """Replan-budget backpressure policy for sustained arrivals.
+
+    ``replan_budget`` is the tolerated full-replan fraction over the last
+    ``window`` reschedules (the session's ``replan_debt``); above it,
+    :meth:`SchedulerSession.backpressure` turns on and admission layers
+    (``core.stream``, ``serve.engine``) hold arrivals for the next clean
+    cut.  ``max_pending`` bounds the caller's deferred-arrivals queue —
+    past it, arrivals are rejected (counted in
+    ``SessionStats.admission_rejects``)."""
+
+    max_pending: int = 64
+    replan_budget: float = 0.5
+    window: int = 32
+
+    def __post_init__(self):
+        if not (isinstance(self.max_pending, int) and self.max_pending >= 1):
+            raise ValueError(f"max_pending must be a positive int, "
+                             f"got {self.max_pending!r}")
+        if not 0.0 <= self.replan_budget <= 1.0:
+            raise ValueError(f"replan_budget must be in [0, 1], "
+                             f"got {self.replan_budget!r}")
+        if not (isinstance(self.window, int) and self.window >= 2):
+            raise ValueError(f"window must be an int >= 2, "
+                             f"got {self.window!r}")
+
+
 @dataclass
 class SessionStats:
     """Planning-side counters for one session.
@@ -174,12 +234,22 @@ class SessionStats:
     the frontier-append fast path, ``full_replans`` planned the residual
     instance from scratch, and ``repair_rejects`` attempted the fast path
     but failed a soundness check (and fell back — they are counted inside
-    ``full_replans`` too)."""
+    ``full_replans`` too).  The grouped repair path (spread-mode G-DM /
+    G-DM-RT) additionally counts reused vs recomputed geometric groups;
+    ``replan_debt`` is the windowed full-replan fraction the
+    :class:`AdmissionPolicy` compares against its budget, and
+    ``admission_deferred`` / ``admission_rejects`` count arrivals the
+    admission layer held for a clean cut / dropped at the queue bound."""
 
     reschedules: int = 0
     full_replans: int = 0
     repairs: int = 0
     repair_rejects: int = 0
+    groups_reused: int = 0
+    groups_replanned: int = 0
+    admission_deferred: int = 0
+    admission_rejects: int = 0
+    replan_debt: float = 0.0
     plan_wall_s: float = 0.0
     first_plan_wall_s: float = 0.0
     repair_wall_s: float = 0.0
@@ -200,6 +270,11 @@ class SessionStats:
             "repairs": self.repairs,
             "repair_rejects": self.repair_rejects,
             "repair_hit_rate": self.repair_hit_rate,
+            "groups_reused": self.groups_reused,
+            "groups_replanned": self.groups_replanned,
+            "admission_deferred": self.admission_deferred,
+            "admission_rejects": self.admission_rejects,
+            "replan_debt": self.replan_debt,
             "plan_wall_s": self.plan_wall_s,
             "first_plan_wall_s": self.first_plan_wall_s,
             "warm_replan_wall_s": self.warm_replan_wall_s,
@@ -238,9 +313,12 @@ class Frontier:
 
 @dataclass
 class SessionSnapshot:
-    """Deep-copied view of the session's residual-demand ledger."""
+    """Deep-copied view of the session's residual-demand ledger.  Carries
+    everything :meth:`SchedulerSession.restore` needs (besides the Job
+    objects themselves) to continue bit-identically after a driver kill."""
 
     now: float
+    m: int
     submitted: tuple[int, ...]
     active: tuple[int, ...]           # jids with unfinished work
     pending: tuple[int, ...]          # jids not yet released
@@ -283,12 +361,19 @@ class SchedulerSession:
     """One stateful scheduling surface for offline, online, and serving-time
     coflow scheduling (see module docstring)."""
 
-    def __init__(self, m: int, scheduler="gdm", *, repair: bool = True,
-                 **opts):
+    def __init__(self, m: int, scheduler="gdm", *, repair: "bool | str" = True,
+                 admission: AdmissionPolicy | None = None, **opts):
         from . import backend
 
         self.m = int(m)
+        if repair not in (True, False, "legacy"):
+            raise ValueError(f"repair must be True, False, or 'legacy', "
+                             f"got {repair!r}")
         self.repair = repair
+        self.admission = admission
+        window = admission.window if admission is not None else 32
+        self._recent_outcomes: list[int] = []   # 1 = full replan, 0 = repair
+        self._recent_window = window
         self._scheduler_name = scheduler if isinstance(scheduler, str) \
             else getattr(scheduler, "name", None)
         if isinstance(scheduler, str):
@@ -314,6 +399,50 @@ class SchedulerSession:
         self.stats = SessionStats()
         self._cache_before = backend.cache_stats()
 
+    @classmethod
+    def restore(cls, snapshot: SessionSnapshot, jobs: list[Job], scheduler="gdm",
+                *, repair: "bool | str" = True,
+                admission: AdmissionPolicy | None = None,
+                **opts) -> "SchedulerSession":
+        """Rebuild a session from a :meth:`snapshot` plus the submitted Job
+        objects — the kill-and-resume path.  The restored session holds the
+        same residual-demand ledger and completion stamps; its first
+        planning event is a full replan of the residual instance (the
+        retained expansion is not serialized), which the repair
+        certification already guarantees is results-identical — so a stream
+        resumed from a snapshot taken at an arrival event continues
+        bit-identically (tests/test_stream.py proves it across the online
+        matrix).  Stats counters restart from zero."""
+        s = cls(snapshot.m, scheduler, repair=repair, admission=admission,
+                **opts)
+        by_jid = {j.jid: j for j in jobs}
+        missing = [jid for jid in snapshot.submitted if jid not in by_jid]
+        if missing:
+            raise ValueError(f"restore needs every submitted job; "
+                             f"missing jids {missing}")
+        s._t = float(snapshot.now)
+        pending = set(snapshot.pending)
+        active = set(snapshot.active)
+        for jid in snapshot.submitted:
+            job = by_jid[jid]
+            s._jobs.append(job)
+            s._by_jid[jid] = job
+        s._remaining = {k: v.copy() for k, v in snapshot.remaining.items()}
+        s._done = dict(snapshot.done)
+        s._active = [by_jid[jid] for jid in snapshot.submitted
+                     if jid in active]
+        for jid in snapshot.submitted:
+            if jid in pending:
+                job = by_jid[jid]
+                insort(s._pending, (float(job.release), jid, job))
+            elif jid not in active:
+                job = by_jid[jid]
+                cs = [s._done[(jid, c.cid)] for c in job.coflows
+                      if (jid, c.cid) in s._done]
+                s._finished[jid] = max(cs, default=float(job.release))
+        s._dirty = bool(s._active)
+        return s
+
     # --- basic views --------------------------------------------------------
 
     @property
@@ -330,6 +459,27 @@ class SchedulerSession:
         """The engine PlanResult of the most recent planning event (None for
         plain-callable schedulers, which expose only a transcript)."""
         return self._last_plan
+
+    @property
+    def replan_debt(self) -> float:
+        """Full-replan fraction over the recent-reschedule window (0.0 while
+        the window is empty) — the signal the admission policy budgets."""
+        if not self._recent_outcomes:
+            return 0.0
+        return sum(self._recent_outcomes) / len(self._recent_outcomes)
+
+    def backpressure(self) -> bool:
+        """True when the attached :class:`AdmissionPolicy` says admission
+        should hold arrivals for a clean cut: the windowed replan debt
+        exceeds the replan budget.  Always False without a policy, and
+        during the warm-up half-window (a single cold full replan must not
+        stall admission)."""
+        pol = self.admission
+        if pol is None:
+            return False
+        if len(self._recent_outcomes) < max(2, pol.window // 2):
+            return False
+        return self.replan_debt > pol.replan_budget
 
     # --- event API ----------------------------------------------------------
 
@@ -411,6 +561,7 @@ class SchedulerSession:
     def snapshot(self) -> SessionSnapshot:
         return SessionSnapshot(
             now=self._t,
+            m=self.m,
             submitted=tuple(j.jid for j in self._jobs),
             active=tuple(j.jid for j in self._active if self._unfinished(j)),
             pending=tuple(jid for _, jid, _ in self._pending),
@@ -509,7 +660,8 @@ class SchedulerSession:
             return
         t0 = time.perf_counter()
         epoch = self._try_repair(sub, cid_maps)
-        if epoch is not None:
+        repaired = epoch is not None
+        if repaired:
             wall = time.perf_counter() - t0
             self.stats.repairs += 1
             self.stats.repair_wall_s += wall
@@ -518,6 +670,9 @@ class SchedulerSession:
             wall = time.perf_counter() - t0
             epoch = self._make_epoch(transcript, plan, cid_maps, sub)
             self.stats.full_replans += 1
+        self._recent_outcomes.append(0 if repaired else 1)
+        del self._recent_outcomes[:-self._recent_window]
+        self.stats.replan_debt = self.replan_debt
         self.stats.reschedules += 1
         self.stats.plan_wall_s += wall
         if self.stats.reschedules == 1:
@@ -598,14 +753,16 @@ class SchedulerSession:
             return None
         name = self._scheduler_name
         opts = getattr(self._scheduler, "opts", None) or {}
-        # om_alg is job-sequential by construction; spread-mode G-DM is
-        # deterministic and certifiable when its grouping is singleton and
-        # order-aligned (checked below) — randomized G-DM always falls back
-        # (its groups re-derive random delays per plan), and G-DM-RT stays
-        # out because DMA-SRT's path-based start times differ from the
-        # isolated-job layout the splice constructs
-        if not (name == "om_alg"
-                or (name == "gdm" and opts.get("delays") == "spread")):
+        spread = opts.get("delays") == "spread"
+        # om_alg is job-sequential by construction; spread-mode G-DM and
+        # G-DM-RT are deterministic per group, so they take the group-aware
+        # path below.  Randomized G-DM/G-DM-RT always fall back (their
+        # delays re-draw per plan).  repair="legacy" keeps the
+        # pre-generalization gate — om_alg plus singleton spread-mode G-DM
+        # — for before/after hit-rate comparisons.
+        gdm_names = ("gdm",) if self.repair == "legacy" else ("gdm", "gdm_rt")
+        grouped = name in gdm_names and spread
+        if not (name == "om_alg" or grouped):
             return None
         ep = self._epoch
         if ep is None or ep.plan is None or not self._arrived_since_plan:
@@ -624,6 +781,10 @@ class SchedulerSession:
             self.stats.repair_rejects += 1
             return None
 
+        if grouped:
+            return self._repair_grouped(sub, cid_maps, parts, new_jids, ep,
+                                        name, opts, reject)
+
         # (1) every unfinished retained coflow untouched since the plan
         for key in old_keys:
             base = ep.base_remaining.get(key)
@@ -639,22 +800,6 @@ class SchedulerSession:
         n_old = len(old_order)
         if order[:n_old] != old_order or set(order[n_old:]) != new_jids:
             return reject()
-
-        # (2b) spread-mode G-DM only: a from-scratch replan must coincide
-        # with the job-sequential layout, which holds exactly when every
-        # geometric group is a single job AND the group sequence follows
-        # the Algorithm 5 order (group keys T_j + rho_j + D_j need not be
-        # monotone along the order, so this is a real check).  A singleton
-        # group's spread delay is 0, so each group is exactly the isolated
-        # job schedule back-to-back — the same construction the splice and
-        # the retained-window check (3) assume.
-        if name == "gdm":
-            from .gdm import group_jobs
-
-            groups = group_jobs(sub, order)
-            if [g[0] for g in groups] != list(order) or \
-                    any(len(g) != 1 for g in groups):
-                return reject()
 
         # (3) retained ledger windows == the windows a from-scratch om_alg
         # replan would emit: back-to-back effective-size windows per coflow
@@ -715,6 +860,113 @@ class SchedulerSession:
         sched = CompositeSchedule(new_parts, sub, meta={
             "order": list(order),
             "algorithm": ep.plan.schedule.meta.get("algorithm", "O(m)Alg"),
+            "repaired": True})
+        plan = PlanResult(ep.plan.name, sched)
+        self._last_plan = plan
+        return self._make_epoch(plan.transcript(), plan, cid_maps, sub)
+
+    def _repair_grouped(self, sub: Instance, cid_maps: dict[int, list[int]],
+                        parts, new_jids: set, ep: _Epoch, name: str,
+                        opts: dict, reject):
+        """Group-aware repair for spread-mode G-DM / G-DM-RT (module
+        docstring): re-derive the Algorithm 5 order and geometric grouping
+        of the residual instance, then walk the replan's group chain —
+        reusing each retained group part whose inputs and chain position
+        are untouched as one shifted block, and recomputing the rest with
+        the exact ``gdm()`` construction.  Bit-identical to the full replan
+        by construction: spread-mode DMA/DMA-SRT layouts are deterministic
+        functions of (group jobs, residual demands, origin), and
+        translation invariant in the origin."""
+        from .engine import PlanResult
+        from .gdm import group_jobs
+        from .ordering import cached_job_order
+
+        old_groups = ep.plan.schedule.meta.get("groups")
+        if old_groups is None or len(old_groups) != len(parts):
+            return reject()
+        tau = self._t - ep.t0
+        itau = int(round(tau))
+        if abs(tau - itau) > 1e-6:
+            return reject()   # reuse needs the integer packet clock
+        order = cached_job_order(sub).order
+        groups = group_jobs(sub, order)
+        legacy = self.repair == "legacy"
+        if legacy and any(len(g) != 1 for g in groups):
+            return reject()
+        old_idx = {tuple(g): i for i, g in enumerate(old_groups)}
+        by_jid = {j.jid: j for j in sub.jobs}
+
+        def untouched(g) -> bool:
+            """Same member coflows as at plan time, residuals bit-equal."""
+            for jid in g:
+                if ep.cid_maps.get(jid) != cid_maps.get(jid):
+                    return False
+                for orig in cid_maps[jid]:
+                    base = ep.base_remaining.get((jid, orig))
+                    if base is None or \
+                            not np.array_equal(self._remaining[(jid, orig)],
+                                               base):
+                        return False
+            return True
+
+        static = []   # per group: the old part to reuse, or None
+        for g in groups:
+            i = old_idx.get(tuple(g))
+            ok = i is not None and not (set(g) & new_jids) and untouched(g)
+            static.append(parts[i] if ok else None)
+        if not any(p is not None for p in static):
+            return None   # nothing reusable: the replan does the same work
+        if legacy and not all(p is not None for p in static):
+            return reject()   # legacy path required the whole plan retained
+
+        from . import backend
+
+        backend.prefetch_plan(
+            c.demand for g, p in zip(groups, static) if p is None
+            for jid in g for c in by_jid[jid].coflows)
+
+        from .dma import dma
+        from .dma_srt import dma_rt
+
+        beta = float(opts.get("beta", 2.0))
+        decompose = bool(opts.get("decompose", False))
+        nested = bool(opts.get("nested", True))
+        require_tree = bool(opts.get("require_tree", True))
+        rng = np.random.default_rng(0)   # spread mode consumes no draws
+
+        new_parts = []
+        reused = 0
+        cursor = 0
+        for g, old_part in zip(groups, static):
+            # gdm(): start = max(t_cur, releases) — sub releases are all 0
+            if old_part is not None and old_part.origin == itau + cursor:
+                # the replan would rebuild this group, from the same inputs,
+                # at exactly the old part's position: slide the whole block
+                part = old_part.shifted_expanded(-itau)
+                reused += 1
+            else:
+                jobs_g = [by_jid[jid] for jid in g]
+                if name == "gdm_rt":
+                    part = dma_rt(jobs_g, self.m, beta=beta, rng=rng,
+                                  origin=cursor, decompose=decompose,
+                                  nested=nested, require_tree=require_tree,
+                                  delays="spread")
+                else:
+                    part = dma(jobs_g, self.m, beta=beta, rng=rng,
+                               origin=cursor, decompose=decompose,
+                               delays="spread")
+            new_parts.append(part)
+            cursor = int(math.ceil(part.makespan))
+        if reused == 0:
+            return None   # chain never aligned; the work done == a replan's
+        self.stats.groups_reused += reused
+        self.stats.groups_replanned += len(groups) - reused
+        sched = CompositeSchedule(new_parts, sub, meta={
+            "order": list(order),
+            "groups": [list(g) for g in groups],
+            "algorithm": ep.plan.schedule.meta.get(
+                "algorithm", "G-DM-RT" if name == "gdm_rt" else "G-DM"),
+            "beta": beta,
             "repaired": True})
         plan = PlanResult(ep.plan.name, sched)
         self._last_plan = plan

@@ -341,6 +341,40 @@ class FinalSchedule:
         return self.coflow_edges
 
     # --- expansion splicing (session plan repair) ---------------------------
+    def shifted_expanded(self, dt: int) -> "FinalSchedule":
+        """This schedule translated by ``dt`` on the expanded (absolute)
+        clock — the whole-block reuse half of the session's group-aware plan
+        repair.  Spread-mode DMA/DMA-SRT layouts are translation invariant
+        (``dma(jobs, origin=o)`` equals ``dma(jobs, origin=0)`` shifted by
+        ``o``), so a retained G-DM group part whose inputs are untouched can
+        be slid to its new chain position instead of being recomputed.
+
+        Pre-expansion state (``events``, ``alphas``, ``merged``) is local to
+        the part and unaffected; only the absolute anchors move: ``origin``,
+        ``exp``, ledger windows, and — when a packet-level decomposition was
+        built — the pieces, exact completions, and per-coflow intervals."""
+        dt = int(dt)
+        if dt == 0:
+            return self
+        return FinalSchedule(
+            m=self.m,
+            origin=self.origin + dt,
+            events=self.events,
+            alphas=self.alphas,
+            exp=self.exp + dt if self.exp.size else self.exp,
+            ledger=[MappedEntry(e.jid, e.cid, e.e0 + dt, e.e1 + dt,
+                                e.srcs, e.dsts, e.units)
+                    for e in self.ledger],
+            decomposition=None if self.decomposition is None else
+                [DecompPiece(p.t0 + dt, p.dur, p.srcs, p.dsts, p.mult)
+                 for p in self.decomposition],
+            exact_completion=None if self.exact_completion is None else
+                {uid: t + dt for uid, t in self.exact_completion.items()},
+            merged=self.merged,
+            coflow_edges=None if self.coflow_edges is None else
+                self.coflow_edges.shifted(dt),
+        )
+
     def spliced(self, tau: float, keep: set, cid_remap: dict) -> "FinalSchedule":
         """The suffix of this expansion from expanded time ``tau`` on,
         restricted to the coflows in ``keep`` (a set of ``(jid, cid)``) and

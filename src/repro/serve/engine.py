@@ -23,12 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Coflow, Job
-from repro.core.session import SchedulerSession
+from repro.core.session import AdmissionPolicy, SchedulerSession
 from repro.models import (ArchConfig, decode_step, init_decode_cache, prefill)
 
 __all__ = ["Request", "ServeConfig", "ServingEngine"]
-
-_PORTS = 8  # abstract port model of the serving interconnect
 
 
 @dataclass
@@ -48,6 +46,26 @@ class ServeConfig:
     slots: int = 4              # concurrent decode slots (continuous batch)
     capacity: int = 256         # KV capacity per slot
     admission: str = "coflow"   # "coflow" (Algorithm 5) | "fifo"
+    ports: int = 8              # abstract port model of the interconnect
+    backpressure: AdmissionPolicy | None = None   # hold admissions on debt
+
+    def __post_init__(self):
+        # validated like registered scheduler options (core.engine
+        # rejects unknown/ill-typed options at construction, not mid-run)
+        for name in ("slots", "capacity", "ports"):
+            v = getattr(self, name)
+            if isinstance(v, bool) or not isinstance(v, int) or v < 1:
+                raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if self.ports < 2:
+            raise ValueError(f"ports must be >= 2 (a coflow needs distinct "
+                             f"src/dst ports), got {self.ports}")
+        if self.admission not in ("coflow", "fifo"):
+            raise ValueError(f"unknown admission {self.admission!r}; "
+                             f"choose from ('coflow', 'fifo')")
+        if self.backpressure is not None and \
+                not isinstance(self.backpressure, AdmissionPolicy):
+            raise TypeError(f"backpressure must be an AdmissionPolicy or "
+                            f"None, got {type(self.backpressure).__name__}")
 
 
 class ServingEngine:
@@ -60,16 +78,20 @@ class ServingEngine:
         # one scheduling session per run() (reset at entry, so an engine is
         # reusable across batches and rid numbering may restart): requests
         # are submitted once on arrival; admission queries the live frontier
-        self._session = SchedulerSession(_PORTS, "om_alg")
+        self._session = self._new_session()
         self._submitted: set[int] = set()
         self._frontier = None
+
+    def _new_session(self) -> SchedulerSession:
+        return SchedulerSession(self.sc.ports, "om_alg",
+                                admission=self.sc.backpressure)
 
     # --- admission ordering (the paper's machinery) ----------------------
     def _request_job(self, r: Request) -> Job:
         # prefill coflow: prompt bytes spread from the weight ports;
         # decode chain: one small coflow per new token (collapsed to one
         # aggregate coflow to keep ordering O(n))
-        m = _PORTS
+        m = self.sc.ports
         d1 = np.zeros((m, m), dtype=np.int64)
         d1[r.rid % m, (r.rid + 1) % m] = max(len(r.tokens), 1)
         d2 = np.zeros((m, m), dtype=np.int64)
@@ -85,12 +107,18 @@ class ServingEngine:
         # never holds future releases and every submitted job shows a finite
         # planned completion); un-arrived requests sort last until their
         # tick, and duplicate rids share one session job (first wins)
-        due = []
-        for r in pending:
-            if r.rid not in self._submitted and r.arrival <= step:
-                self._submitted.add(r.rid)
-                due.append(r)
+        due = [r for r in pending
+               if r.rid not in self._submitted and r.arrival <= step]
+        if due and self._session.backpressure():
+            # same signal the stream driver budgets on (core.stream): while
+            # windowed replan debt exceeds the policy budget, hold the due
+            # submissions — they stay pending (FIFO-ordered by the final
+            # sort key below) and enter the session at a later tick
+            self._session.stats.admission_deferred += len(due)
+            due = []
         if due:
+            for r in due:
+                self._submitted.add(r.rid)
             # only arrival ticks touch the session: advance the fabric clock
             # to the tick, submit, and let frontier() replan once; planned
             # completions are static within an epoch, so no-arrival ticks
@@ -108,7 +136,7 @@ class ServingEngine:
 
     # --- serving loop -----------------------------------------------------
     def run(self, requests: list[Request], max_steps: int = 10_000) -> dict:
-        self._session = SchedulerSession(_PORTS, "om_alg")
+        self._session = self._new_session()
         self._submitted = set()
         self._frontier = None
         pending = list(requests)

@@ -124,3 +124,38 @@ def test_serving_engine_fifo_vs_coflow():
         assert eng.run(reqs())["completed"] == 6
     # both complete; admission ordering is exercised (values may differ)
     assert out["coflow"]["steps"] > 0
+
+
+def test_serve_config_ports_validation_and_threading():
+    from repro.core import AdmissionPolicy
+    from repro.serve import Request, ServeConfig, ServingEngine
+    from repro.train.step import init_params
+
+    # option validation at construction, like make_scheduler's registry
+    with pytest.raises(ValueError, match="ports"):
+        ServeConfig(ports=1)
+    with pytest.raises(ValueError, match="ports"):
+        ServeConfig(ports="8")
+    with pytest.raises(ValueError, match="ports"):
+        ServeConfig(ports=True)
+    with pytest.raises(ValueError, match="slots"):
+        ServeConfig(slots=0)
+    with pytest.raises(ValueError, match="admission"):
+        ServeConfig(admission="lifo")
+    with pytest.raises(TypeError, match="backpressure"):
+        ServeConfig(backpressure=0.5)
+
+    # the session's port model follows the configured serving topology
+    cfg = get_config("qwen3-1.7b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = AdmissionPolicy(max_pending=8, replan_budget=0.5, window=8)
+    eng = ServingEngine(cfg, params, ServeConfig(slots=2, capacity=32,
+                                                 ports=5, backpressure=policy))
+    assert eng._session.m == 5
+    assert eng._session.admission is policy
+    job = eng._request_job(Request(rid=11, tokens=np.arange(3), max_new=2))
+    assert job.m == 5
+    r = Request(rid=0, tokens=np.arange(4), max_new=2, weight=2.0)
+    assert [x.rid for x in eng._admission_order([r], step=0)] == [0]
+    # run() resets onto the configured topology too
+    assert eng._new_session().m == 5

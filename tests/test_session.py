@@ -154,9 +154,10 @@ def test_repair_rejects_mid_window_arrival():
 
 
 def test_repair_never_fires_for_interleaving_schedulers():
-    """G-DM groups re-derive random delays per plan; the repair path must
-    not pretend to splice them (it is only certified for the job-sequential
-    baseline and for spread-mode G-DM with singleton groups)."""
+    """Randomized G-DM groups re-derive random delays per plan; the repair
+    path must not pretend to splice them (it is only certified for the
+    job-sequential baseline and for deterministic spread-mode G-DM /
+    G-DM-RT)."""
     inst = _append_workload()
     on = simulate_online(inst, "gdm", driver="session", seed=0)
     bat = simulate_online(inst, "gdm", driver="batch", seed=0)
@@ -164,12 +165,14 @@ def test_repair_never_fires_for_interleaving_schedulers():
     assert on.job_completions == bat.job_completions
 
 
-def _geometric_append_workload(m=10, base=4, appends=3):
-    """Geometrically growing single-coflow jobs: prefix aggregate sizes
-    roughly triple per job, so every G-DM geometric group is a singleton in
-    Algorithm 5 order and the spread-delay plan coincides with the
-    job-sequential layout; appends land on the live frontier's clean cuts
-    (probe session, as in the kernels_bench session_repair workload)."""
+def _geometric_append_workload(m=10, base=4, appends=3, scheduler="gdm",
+                               chain=False):
+    """Geometrically growing jobs: prefix aggregate sizes roughly triple per
+    job, so every G-DM geometric group is a singleton in Algorithm 5 order;
+    appends land on the live frontier's clean cuts (probe session, as in the
+    kernels_bench session_repair workload).  chain=True gives every job a
+    two-coflow chain (a rooted tree), exercising DMA-SRT layouts under
+    G-DM-RT."""
     rng = np.random.default_rng(0)
 
     def perm_demand(units):
@@ -179,17 +182,24 @@ def _geometric_append_workload(m=10, base=4, appends=3):
         np.fill_diagonal(d, 0)
         return d
 
-    jobs = [Job(k, [Coflow(k, 0, perm_demand(4 * 3 ** k))], [],
-                weight=2.0 ** -k, release=0) for k in range(base)]
-    probe = SchedulerSession(m, "gdm", delays="spread", seed=0)
+    def make_job(jid, units, release):
+        if chain:
+            coflows = [Coflow(jid, 0, perm_demand(units)),
+                       Coflow(jid, 1, perm_demand(units))]
+            return Job(jid, coflows, [(0, 1)], weight=2.0 ** -jid,
+                       release=release)
+        return Job(jid, [Coflow(jid, 0, perm_demand(units))], [],
+                   weight=2.0 ** -jid, release=release)
+
+    jobs = [make_job(k, 4 * 3 ** k, 0) for k in range(base)]
+    opts = {"delays": "spread", "seed": 0}
+    probe = SchedulerSession(m, scheduler, **opts)
     for j in jobs:
         probe.submit(j)
     size = 4 * 3 ** base
     for a in range(appends):
         t = min(probe.frontier().completions.values())
-        jid = base + a
-        job = Job(jid, [Coflow(jid, 0, perm_demand(size))], [],
-                  weight=2.0 ** -jid, release=int(t))
+        job = make_job(base + a, size, int(t))
         jobs.append(job)
         probe.advance(until=t)
         probe.submit(job)
@@ -210,30 +220,110 @@ def test_repair_fires_for_spread_mode_gdm():
     s_on = on.stats["session"]
     assert s_on["repairs"] == 3 and s_on["repair_rejects"] == 0
     assert s_on["full_replans"] == 1
+    assert s_on["groups_reused"] >= 3
     assert on.job_completions == off.job_completions == bat.job_completions
     assert on.twct() == off.twct() == bat.twct()
 
 
-def test_spread_repair_rejects_non_singleton_groups():
-    """Equal-size jobs share a geometric group, so a spread-mode replan is
-    NOT job-sequential — the certification must reject the splice (and the
-    fallback must stay results-identical to the batch loop)."""
-    m = 6
-    d = np.zeros((m, m), np.int64)
-    d[0, 1] = 16
-    d2 = np.zeros((m, m), np.int64)
-    d2[2, 3] = 16
-    d3 = np.zeros((m, m), np.int64)
-    d3[4, 5] = 16
-    jobs = [Job(0, [Coflow(0, 0, d)], [], weight=1.0, release=0),
-            Job(1, [Coflow(1, 0, d2)], [], weight=0.9, release=0),
-            Job(2, [Coflow(2, 0, d3)], [], weight=0.1, release=16)]
+@pytest.mark.parametrize("chain", [False, True])
+def test_repair_fires_for_spread_mode_gdm_rt(chain):
+    """The G-DM-RT certification gap: spread-mode G-DM-RT sessions used to
+    fall back to a full replan on every arrival.  The grouped repair reuses
+    untouched group blocks and rebuilds dirty groups with dma_rt itself, so
+    appends at clean cuts now take the fast path — for single-coflow jobs
+    and for real two-coflow chain trees (DMA-SRT path layouts)."""
+    inst = _geometric_append_workload(scheduler="gdm_rt", chain=chain)
+    on = simulate_online(inst, "gdm_rt", driver="session", delays="spread")
+    off = simulate_online(inst, "gdm_rt", driver="session", repair=False,
+                          delays="spread")
+    bat = simulate_online(inst, "gdm_rt", driver="batch", delays="spread")
+    s_on = on.stats["session"]
+    assert s_on["repairs"] >= 1 and s_on["groups_reused"] >= 1
+    assert on.job_completions == off.job_completions == bat.job_completions
+    assert on.twct() == off.twct() == bat.twct()
+
+
+def test_spread_repair_reuses_non_singleton_group_block():
+    """The non-singleton certification gap: when G-DM grouping merges jobs,
+    the old singleton check rejected every repair.  A retained multi-job
+    group whose residuals and chain position are untouched is now reused as
+    ONE block (shifted_expanded), bit-identical to the full replan."""
+    m = 8
+    sizes = {0: 16, 1: 60, 2: 64}   # jobs 1, 2 share a geometric group
+    dems = {}
+    for jid, size in sizes.items():
+        d = np.zeros((m, m), np.int64)
+        d[2 * jid, 2 * jid + 1] = size
+        dems[jid] = d
+    jobs = [Job(jid, [Coflow(jid, 0, dems[jid])], [],
+                weight=1.0 - 0.1 * jid, release=0) for jid in sizes]
+    inst0 = Instance(m, jobs)
+    from repro.core.gdm import gdm
+
+    plan0 = gdm(inst0, delays="spread")
+    groups0 = plan0.meta["groups"]
+    assert any(len(g) > 1 for g in groups0), \
+        "workload must produce a non-singleton geometric group"
+    # arrival on job0's completion boundary: the merged group is untouched.
+    # The new job carries a 16-unit flow so the residual instance keeps the
+    # same gamma (min positive flow) and hence the same geometric buckets.
+    probe = SchedulerSession(m, "gdm", delays="spread", seed=0)
+    for j in jobs:
+        probe.submit(j)
+    t = min(probe.frontier().completions.values())
+    d_new = np.zeros((m, m), np.int64)
+    d_new[6, 7] = 3000
+    d_new[7, 6] = 16
+    jobs.append(Job(3, [Coflow(3, 0, d_new)], [], weight=0.05,
+                    release=int(t)))
+    inst = Instance(m, jobs)
+    on = simulate_online(inst, "gdm", driver="session", delays="spread")
+    off = simulate_online(inst, "gdm", driver="session", repair=False,
+                          delays="spread")
+    bat = simulate_online(inst, "gdm", driver="batch", delays="spread")
+    s = on.stats["session"]
+    assert s["repairs"] == 1 and s["groups_reused"] >= 1
+    assert on.job_completions == off.job_completions == bat.job_completions
+    assert on.twct() == off.twct() == bat.twct()
+
+
+def test_spread_repair_recomputes_inflight_group_and_reuses_rest():
+    """A mid-window arrival leaves the in-flight group partially executed:
+    the grouped repair recomputes that group from its residual (whose
+    effective size shrinks by exactly the executed prefix on this integral
+    workload) and still reuses the untouched downstream blocks."""
+    m = 8
+    sizes = [16, 48, 144]
+    jobs = []
+    for jid, size in enumerate(sizes):
+        d = np.zeros((m, m), np.int64)
+        d[2 * jid, 2 * jid + 1] = size
+        jobs.append(Job(jid, [Coflow(jid, 0, d)], [],
+                        weight=2.0 ** -jid, release=0))
+    d_new = np.zeros((m, m), np.int64)
+    d_new[6, 7] = 500
+    jobs.append(Job(3, [Coflow(3, 0, d_new)], [], weight=0.05, release=8))
     inst = Instance(m, jobs)
     on = simulate_online(inst, "gdm", driver="session", delays="spread")
     bat = simulate_online(inst, "gdm", driver="batch", delays="spread")
     s = on.stats["session"]
-    assert s["repairs"] == 0 and s["repair_rejects"] >= 1
+    assert s["repairs"] == 1 and s["groups_reused"] >= 1
+    assert s["groups_replanned"] >= 1
     assert on.job_completions == bat.job_completions
+    assert on.twct() == bat.twct()
+
+
+def test_legacy_repair_mode_keeps_old_gate():
+    """repair="legacy" reproduces the pre-generalization behaviour (the
+    before side of the serve bench's hit-rate delta): G-DM-RT never
+    repairs, and results stay identical either way."""
+    inst = _geometric_append_workload(scheduler="gdm_rt")
+    new = simulate_online(inst, "gdm_rt", driver="session", delays="spread")
+    old = simulate_online(inst, "gdm_rt", driver="session", repair="legacy",
+                          delays="spread")
+    assert new.stats["session"]["repairs"] >= 1
+    assert old.stats["session"]["repairs"] == 0
+    assert new.job_completions == old.job_completions
 
 
 # --- the event API -----------------------------------------------------------
