@@ -1,0 +1,44 @@
+"""Static-analysis smoke: time the full-repo contract scan so the pass's
+own cost is tracked in benchmarks.csv alongside the things it guards.
+
+Two rows: the file-scope AST rules alone (pure parsing + visitors), and
+the full scan including the inspect-based registry-consistency rule
+(which imports the live registries and builds every scenario at small
+scale — the dominant cost)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis import names, scan_paths
+
+from .common import emit, timed2
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run(fast: bool = True) -> None:
+    paths = [ROOT / "src", ROOT / "benchmarks"]
+    file_rules = [n for n in names() if n != "registry-consistency"]
+
+    rep, us, comp, steady = timed2(
+        scan_paths, paths, root=ROOT, rules=file_rules, reps=2 if fast else 3)
+    emit("analysis_file_rules", us,
+         f"files={rep.n_files};rules={len(file_rules)};"
+         f"findings={len(rep.unsuppressed)};suppressed={len(rep.suppressed)}",
+         compile_ms=comp, steady_ms=steady, backend="python",
+         interpret=False)
+
+    rep, us, comp, steady = timed2(
+        scan_paths, paths, root=ROOT, project=True, reps=2 if fast else 3)
+    emit("analysis_full_repo_scan", us,
+         f"files={rep.n_files};rules={len(names())};"
+         f"findings={len(rep.unsuppressed)};suppressed={len(rep.suppressed)}",
+         compile_ms=comp, steady_ms=steady, backend="python",
+         interpret=False)
+    if rep.unsuppressed:
+        print(f"analysis: WARNING {len(rep.unsuppressed)} unsuppressed "
+              "finding(s) — the static-analysis CI gate will fail")
+
+
+if __name__ == "__main__":
+    run()

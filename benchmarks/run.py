@@ -28,7 +28,8 @@ def main() -> None:
                     help="published workload scale (longest)")
     ap.add_argument("--only", default=None,
                     help="comma list: figs,online,beta,rsd,planner,kernels,"
-                         "bna_batch,roofline,scenarios,plan_pipeline,serve")
+                         "bna_batch,roofline,scenarios,plan_pipeline,serve,"
+                         "analysis")
     ap.add_argument("--scenario", default=None,
                     help="comma list of scenario-registry keys for the "
                          "scenario x scheduler matrix (default: all "
@@ -86,12 +87,12 @@ def main() -> None:
 
     want = set((args.only or
                 "figs,online,beta,rsd,planner,kernels,roofline,scenarios,"
-                "plan_pipeline,serve").split(","))
+                "plan_pipeline,serve,analysis").split(","))
     if args.scenario:
         want.add("scenarios")
-    from . import (common, kernels_bench, paper_figs, plan_pipeline,
-                   planner_ab, roofline_report, scenario_matrix,
-                   serve_stream)
+    from . import (analysis_bench, common, kernels_bench, paper_figs,
+                   plan_pipeline, planner_ab, roofline_report,
+                   scenario_matrix, serve_stream)
 
     if "figs" in want:
         paper_figs.workload_calibration(scale)
@@ -127,6 +128,8 @@ def main() -> None:
         kernels_bench.run(fast=args.fast)
     elif "bna_batch" in want:
         kernels_bench.run_bna_batch(fast=args.fast)
+    if "analysis" in want:
+        analysis_bench.run(fast=args.fast)
     if "roofline" in want:
         roofline_report.bna_batch_roofline()
         try:

@@ -1,0 +1,68 @@
+"""CLI: ``PYTHONPATH=src python -m repro.analysis [--strict] [paths...]``.
+
+Prints one block per finding (``path:line: rule: message`` + fix hint)
+and a summary line; ``--strict`` exits 1 on any unsuppressed finding
+(the contract the ``static-analysis`` CI job enforces).  Default paths:
+``src benchmarks``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import available, names, scan_paths
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-aware static contract checker (rng-discipline, "
+                    "backend-dispatch, overflow-guard, jit-purity, "
+                    "frozen-core-types, registry-consistency, "
+                    "pragma-discipline)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to scan (default: src "
+                         "benchmarks)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unsuppressed finding")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="RULE",
+                    help="run only this rule (repeatable; default: all)")
+    ap.add_argument("--root", default=None,
+                    help="repo root for relative paths / pragma lookup "
+                         "(default: cwd)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print pragma-suppressed findings")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, doc in available().items():
+            print(f"{name:22s} {doc}")
+        return 0
+    if args.rule:
+        unknown = sorted(set(args.rule) - set(names()))
+        if unknown:
+            ap.error(f"unknown rule(s) {unknown}; see --list-rules")
+
+    report = scan_paths(args.paths or ["src", "benchmarks"],
+                        root=args.root, rules=args.rule)
+    if args.json:
+        print(json.dumps([f.to_dict() for f in report.findings], indent=2))
+    else:
+        shown = report.findings if args.show_suppressed \
+            else report.unsuppressed
+        for f in shown:
+            print(f.render())
+        print(f"checked {report.n_files} files: "
+              f"{len(report.unsuppressed)} finding(s), "
+              f"{len(report.suppressed)} suppressed")
+    return 1 if (args.strict and not report.ok()) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

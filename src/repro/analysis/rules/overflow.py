@@ -1,0 +1,77 @@
+"""overflow-guard: every kernel ``ops.py`` lowers to Pallas programs with
+int32 index/accumulator arithmetic (TPU-native), so each must bound the
+element/index space against ``np.iinfo(np.int32).max`` before launching
+and either fall back to the numpy/jnp reference (the ``merge_fix``
+pattern) or raise loudly (the ``bna_step`` pattern) — never wrap
+silently."""
+from __future__ import annotations
+
+import ast
+import re
+
+from .. import FileContext, register_rule
+
+_SENTINEL_NAME = re.compile(r"_?I(?:NT)?_?32_?MAX", re.IGNORECASE)
+_I32_MAX = 2**31 - 1
+
+_HINT = ("compare the padded element/index count against "
+         "np.iinfo(np.int32).max and fall back to the ref implementation "
+         "(kernels/merge_fix/ops.py) or raise (kernels/bna_step/ops.py)")
+
+
+def _mentions_sentinel(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and _SENTINEL_NAME.search(n.id):
+            return True
+        if isinstance(n, ast.Attribute) and _SENTINEL_NAME.search(n.attr):
+            return True
+        if isinstance(n, ast.Constant) and n.value == _I32_MAX:
+            return True
+        if isinstance(n, ast.Call):
+            tail = None
+            if isinstance(n.func, ast.Attribute):
+                tail = n.func.attr
+            elif isinstance(n.func, ast.Name):
+                tail = n.func.id
+            if tail == "iinfo":
+                return True
+    return False
+
+
+def _has_ref_import(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod.split(".")[-1] == "ref" or \
+                    any(a.name.split(".")[-1] == "ref" for a in node.names):
+                return True
+        elif isinstance(node, ast.Import):
+            if any(a.name.split(".")[-1] == "ref" for a in node.names):
+                return True
+    return False
+
+
+@register_rule("overflow-guard",
+               "kernel ops.py must guard int32 index/accumulator space "
+               "and fall back to the numpy ref (or raise) past it")
+def _overflow_guard(ctx: FileContext):
+    if not re.search(r"repro/kernels/[^/]+/ops\.py$", ctx.rel):
+        return
+    guards = [node for node in ast.walk(ctx.tree)
+              if isinstance(node, (ast.If, ast.IfExp))
+              and _mentions_sentinel(node.test)]
+    if not guards:
+        first_fn = next((n for n in ast.walk(ctx.tree)
+                         if isinstance(n, ast.FunctionDef)), None)
+        yield ctx.finding(
+            "overflow-guard", first_fn or 1,
+            "no int32 overflow guard: kernel launches without bounding "
+            "the index/accumulator space", _HINT)
+        return
+    raises = any(isinstance(n, ast.Raise)
+                 for g in guards for n in ast.walk(g))
+    if not raises and not _has_ref_import(ctx.tree):
+        yield ctx.finding(
+            "overflow-guard", guards[0],
+            "overflow guard present but no escape: neither a ref-module "
+            "fallback import nor a raise in the guarded branch", _HINT)

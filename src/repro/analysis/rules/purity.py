@@ -1,0 +1,126 @@
+"""jit-purity: a function handed to ``jax.jit`` / ``lax.while_loop`` /
+``lax.scan`` / ``lax.fori_loop`` / ``jax.vmap`` runs as a traced program —
+host-side numpy calls freeze trace-time values, prints fire once per
+trace (not per step), closed-over mutation desynchronizes replays, and
+``if tracer:`` raises ConcretizationTypeError only on the shapes that
+reach it.  The jitted planning pipeline's bit-identity to the python path
+(``core/pipeline.py``) depends on every staged body being pure."""
+from __future__ import annotations
+
+import ast
+
+from .. import FileContext, register_rule
+from ._util import import_aliases, iter_scope, local_names, param_names, \
+    resolve
+
+_JIT_ENTRY = {"jax.jit", "jax.vmap", "jax.pmap", "jax.checkpoint",
+              "jax.lax.while_loop", "jax.lax.scan", "jax.lax.fori_loop",
+              "jax.lax.map", "jax.lax.cond", "jax.lax.switch"}
+
+# host-only numpy attributes that are pure trace-time constants — calling
+# them inside a jitted body is deliberate staging, not a leak
+_PURE_NP = {"iinfo", "finfo", "dtype"}
+
+
+def _jitted_functions(tree, aliases):
+    """(node, via) for every FunctionDef/Lambda staged into a jit entry."""
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)}
+    out: dict[int, tuple[ast.AST, str]] = {}
+
+    def add(node, via):
+        out.setdefault(id(node), (node, via))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            full = resolve(node.func, aliases)
+            if full in _JIT_ENTRY:
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if isinstance(arg, ast.Lambda):
+                        add(arg, full)
+                    elif isinstance(arg, ast.Name) and arg.id in defs:
+                        add(defs[arg.id], full)
+        elif isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                full = resolve(target, aliases)
+                if full in _JIT_ENTRY:
+                    add(node, full or "jax.jit")
+                elif full in ("functools.partial", "partial") and \
+                        isinstance(dec, ast.Call):
+                    if any(resolve(a, aliases) in _JIT_ENTRY
+                           for a in dec.args):
+                        add(node, "jax.jit")
+    return out.values()
+
+
+@register_rule("jit-purity",
+               "functions staged into jax.jit/lax.while_loop/lax.scan/"
+               "jax.vmap must not call numpy, print, mutate closed-over "
+               "state, or branch on tracer truthiness")
+def _jit_purity(ctx: FileContext):
+    if not ctx.in_core() or ctx.in_testing():
+        return
+    aliases = import_aliases(ctx.tree)
+    for fn, via in _jitted_functions(ctx.tree, aliases):
+        name = getattr(fn, "name", "<lambda>")
+        locs = local_names(fn)
+        params = param_names(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in [stmt, *iter_scope(stmt)]:
+                yield from _check_node(ctx, node, name, via, locs, params,
+                                       aliases)
+
+
+def _check_node(ctx, node, name, via, locs, params, aliases):
+    if isinstance(node, ast.Call):
+        full = resolve(node.func, aliases)
+        if full and full.split(".")[0] == "numpy":
+            attr = full.split(".")[-1]
+            if attr not in _PURE_NP:
+                yield ctx.finding(
+                    "jit-purity", node,
+                    f"{name}() is staged into {via} but calls host "
+                    f"numpy ({full})",
+                    "use jnp/lax inside jitted bodies; host numpy freezes "
+                    "trace-time values")
+        elif full == "print":
+            yield ctx.finding(
+                "jit-purity", node,
+                f"{name}() is staged into {via} but calls print()",
+                "use jax.debug.print, or log outside the jitted body")
+    elif isinstance(node, (ast.Global, ast.Nonlocal)):
+        yield ctx.finding(
+            "jit-purity", node,
+            f"{name}() is staged into {via} but declares "
+            f"{'global' if isinstance(node, ast.Global) else 'nonlocal'} "
+            f"{', '.join(node.names)}",
+            "thread state through the carry instead of mutating closures")
+    elif isinstance(node, (ast.Assign, ast.AugAssign)):
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        for t in targets:
+            root = t
+            while isinstance(root, (ast.Attribute, ast.Subscript)):
+                root = root.value
+            if isinstance(root, ast.Name) and root.id not in locs \
+                    and root is not t:
+                yield ctx.finding(
+                    "jit-purity", node,
+                    f"{name}() is staged into {via} but mutates "
+                    f"closed-over state ({root.id})",
+                    "return updated values through the carry; jitted "
+                    "bodies must be pure")
+    elif isinstance(node, (ast.If, ast.While)):
+        test = node.test
+        bare = test.id if isinstance(test, ast.Name) else (
+            test.operand.id if isinstance(test, ast.UnaryOp)
+            and isinstance(test.op, ast.Not)
+            and isinstance(test.operand, ast.Name) else None)
+        if bare is not None and bare in params:
+            yield ctx.finding(
+                "jit-purity", node,
+                f"{name}() is staged into {via} but branches on the "
+                f"truthiness of traced argument {bare!r}",
+                "use lax.cond/jnp.where, or mark the argument static")

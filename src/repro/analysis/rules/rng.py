@@ -1,0 +1,62 @@
+"""rng-discipline: randomness must flow through a seeded
+``np.random.default_rng(seed)`` Generator parameter (the named-stream
+convention of ``core/traces.py`` / ``core/stream.py`` — seed, seed+1,
+seed+2).  Global seeding and module-level draws make results depend on
+call order, which breaks the bit-identity contracts the equivalence
+tests pin."""
+from __future__ import annotations
+
+import ast
+
+from .. import FileContext, register_rule
+from ._util import dotted, import_aliases, resolve
+
+# numpy.random attributes that are seeded-construction, not draws
+_CONSTRUCTORS = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "MT19937", "SFC64", "BitGenerator", "RandomState"}
+
+_HINT = ("thread a seeded np.random.default_rng(seed) Generator through a "
+         "parameter (named streams: seed, seed+1, ... as in core/traces.py)")
+
+
+@register_rule("rng-discipline",
+               "no np.random.seed / module-level np.random.* / stdlib "
+               "random.* outside testing; randomness flows through a "
+               "seeded Generator parameter")
+def _rng_discipline(ctx: FileContext):
+    if ctx.in_testing():
+        return
+    aliases = import_aliases(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        full = resolve(node.func, aliases)
+        if full is None:
+            continue
+        if full == "numpy.random.seed":
+            yield ctx.finding(
+                "rng-discipline", node,
+                "np.random.seed() sets hidden global state", _HINT)
+        elif full.startswith("numpy.random."):
+            attr = full.rsplit(".", 1)[-1]
+            if attr not in _CONSTRUCTORS:
+                yield ctx.finding(
+                    "rng-discipline", node,
+                    f"module-level draw np.random.{attr}() uses the "
+                    "unseeded global stream", _HINT)
+            elif attr == "default_rng" and not node.args and not node.keywords:
+                yield ctx.finding(
+                    "rng-discipline", node,
+                    "default_rng() without a seed is entropy-seeded and "
+                    "irreproducible", _HINT)
+        elif full == "random" or full.startswith("random."):
+            # only flag names actually bound by an import of the stdlib
+            # module — never a local variable that happens to be `random`
+            parts = dotted(node.func)
+            bound = aliases.get(parts[0]) if parts else None
+            if bound is not None and (bound == "random"
+                                      or bound.startswith("random.")):
+                yield ctx.finding(
+                    "rng-discipline", node,
+                    f"stdlib {full}() draws from unseeded global state",
+                    _HINT)

@@ -259,6 +259,7 @@ def _resolve_step(force: str | None):
     def step_pallas(d, row, col, D, match):
         global _warned_bna_fallback
         try:
+            # repro: allow(backend-dispatch): this IS the REPRO_BNA_BACKEND resolved dispatch site
             from repro.kernels.bna_step.ops import bna_step_batch
 
             return bna_step_batch(d, row, col, D, match)

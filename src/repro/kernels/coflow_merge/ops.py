@@ -10,6 +10,8 @@ from .. import default_interpret
 from .coflow_merge import coflow_merge_padded
 from .ref import alphas_ref, build_delta
 
+_I32_MAX = int(np.iinfo(np.int32).max)
+
 
 def interval_alphas(
     si: np.ndarray,   # (E,) start interval index per edge activation
@@ -28,6 +30,12 @@ def interval_alphas(
         return np.zeros(0, dtype=np.int64)
     if interpret is None:
         interpret = default_interpret()
+    if int(np.asarray(si).size) >= _I32_MAX:
+        # per-port activation counts are bounded by E, and the delta
+        # accumulators are int32 — past this nothing (kernel or ref) is exact
+        raise ValueError(
+            f"coflow_merge: {np.asarray(si).size} edge activations overflow "
+            "the int32 delta accumulators")
     delta = build_delta(jnp.asarray(si), jnp.asarray(ei), jnp.asarray(s),
                         jnp.asarray(r), K, m)
     if not use_kernel:
@@ -35,6 +43,10 @@ def interval_alphas(
     bk = min(block_k, max(8, 1 << (K - 1).bit_length()))
     k_pad = (-K) % bk
     p_pad = (-delta.shape[1]) % 128
+    # Pallas indexes the padded delta with int32 arithmetic; past that the
+    # jnp reference (64-bit indexing) is the only correct path.
+    if (K + k_pad) * (delta.shape[1] + p_pad) >= _I32_MAX:
+        return np.asarray(alphas_ref(delta), dtype=np.int64)
     dpad = jnp.pad(delta, ((0, k_pad), (0, p_pad)))
     out = coflow_merge_padded(dpad, block_k=bk, interpret=interpret)
     return np.asarray(out[:K, 0], dtype=np.int64)

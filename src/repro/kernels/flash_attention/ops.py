@@ -4,10 +4,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import default_interpret
 from .flash_attention import flash_attention_padded
 from .ref import attention_ref
+
+_I32_MAX = int(np.iinfo(np.int32).max)
 
 
 def _round_up(x: int, k: int) -> int:
@@ -42,6 +45,10 @@ def flash_attention(
     sq_p = _round_up(Sq, bq)
     sk_p = _round_up(Sk, bk)
     d_p = _round_up(d, 128)
+    # Pallas indexes the padded q/k/v with int32 arithmetic; past that the
+    # blocked kernel would wrap, so take the exact reference instead.
+    if max(B * Hq * sq_p * d_p, B * Hkv * sk_p * d_p) >= _I32_MAX:
+        return attention_ref(q, k, v, causal=causal, scale=scale)
 
     def pad(x, s_to, d_to):
         return jnp.pad(x, ((0, 0), (0, 0), (0, s_to - x.shape[2]), (0, d_to - x.shape[3])))

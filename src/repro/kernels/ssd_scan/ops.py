@@ -4,10 +4,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import default_interpret
 from .ref import ssd_ref
 from .ssd_scan import ssd_scan_padded
+
+_I32_MAX = int(np.iinfo(np.int32).max)
 
 
 def ssd_scan(
@@ -25,8 +28,14 @@ def ssd_scan(
     if interpret is None:
         interpret = default_interpret()
     B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
     L = min(chunk, S)
     pad = (-S) % L
+    # Pallas indexes the padded operands with int32 arithmetic; past that
+    # the associative-scan reference is the only correct path.
+    Sp = S + pad
+    if max(B * Sp * H * P, B * Sp * G * N) >= _I32_MAX:
+        return ssd_ref(x, a, b, c)
     if pad:
         # padded steps use decay 1 (log 0) and zero inputs: state unchanged
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))

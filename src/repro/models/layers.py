@@ -162,6 +162,7 @@ def attention(cfg: ArchConfig, q, k, v, causal: bool = True) -> jax.Array:
         else:
             impl = "chunked" if q.shape[1] * k.shape[1] > 1 << 22 else "ref"
     if impl == "pallas":
+        # repro: allow(backend-dispatch): attn_impl="pallas" is the NN stack's own kernel switch, not scheduler backend dispatch
         from repro.kernels.flash_attention import flash_attention
 
         out = flash_attention(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),

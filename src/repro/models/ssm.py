@@ -85,6 +85,7 @@ def mamba_block(cfg: ArchConfig, p: dict, x: jax.Array,
     use_kernel = (cfg.attn_impl == "pallas"
                   or (cfg.attn_impl == "auto" and jax.default_backend() == "tpu"))
     if use_kernel and not return_state:
+        # repro: allow(backend-dispatch): use_kernel is the NN stack's own kernel switch, not scheduler backend dispatch
         from repro.kernels.ssd_scan import ssd_scan
         y = ssd_scan(x_in, a, b, c, chunk=s.chunk)
         hfinal = None
@@ -185,6 +186,7 @@ def mamba_decode_step(cfg: ArchConfig, p: dict, state: dict, x: jax.Array):
     new_conv = window[:, 1:, :]
     xs, x_in, a, b, c = _ssd_inputs(cfg, p, conv_out, dt_raw)
     rep = H // s.n_groups
+    # repro: allow(backend-dispatch): decode-step ref is pure jnp math shared with the kernel package, no dispatch layer exists for it
     from repro.kernels.ssd_scan.ref import ssd_decode_step
     hs, y = ssd_decode_step(state["h"], x_in[:, 0], a[:, 0], b[:, 0], c[:, 0])
     y = y[:, None] + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)

@@ -1,0 +1,375 @@
+"""Static-analysis subsystem tests: per-rule failing + passing fixtures
+(the CLI must flag the former and stay quiet on the latter), pragma
+semantics, inspect-based registry drift, and the self-scan contract that
+the repo's own tree is clean under --strict."""
+from __future__ import annotations
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import scan_paths
+from repro.analysis.__main__ import main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def write(tmp_path: Path, rel: str, text: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(text))
+    return p
+
+
+def rule_findings(tmp_path: Path, rule: str):
+    rep = scan_paths([tmp_path], root=tmp_path, project=False)
+    return [f for f in rep.findings if f.rule == rule and not f.suppressed]
+
+
+def assert_cli_flags(tmp_path: Path, rule: str, capsys) -> None:
+    """The CLI itself (not just the library) must flag the fixture."""
+    rc = main([str(tmp_path), "--root", str(tmp_path), "--strict"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert rule in out
+
+
+# ---------------------------------------------------------------------------
+# rng-discipline
+# ---------------------------------------------------------------------------
+
+def test_rng_discipline_failing_fixture(tmp_path, capsys):
+    write(tmp_path, "src/repro/core/rngbad.py", """
+        import numpy as np
+        import random
+
+        np.random.seed(0)
+        x = np.random.rand(3)
+        rng = np.random.default_rng()
+        y = random.choice([1, 2])
+    """)
+    found = rule_findings(tmp_path, "rng-discipline")
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 4
+    assert "np.random.seed" in msgs and "rand" in msgs
+    assert "without a seed" in msgs and "stdlib" in msgs
+    assert_cli_flags(tmp_path, "rng-discipline", capsys)
+
+
+def test_rng_discipline_passing_fixture(tmp_path):
+    write(tmp_path, "src/repro/core/rngok.py", """
+        import numpy as np
+
+        def build(seed=0, rng=None):
+            rng = np.random.default_rng(seed) if rng is None else rng
+            random = object()   # local name shadows nothing imported
+            return rng.normal(), random
+    """)
+    # tests/ and repro/testing/ are exempt even with global draws
+    write(tmp_path, "tests/test_x.py", """
+        import numpy as np
+        np.random.seed(0)
+    """)
+    assert rule_findings(tmp_path, "rng-discipline") == []
+
+
+# ---------------------------------------------------------------------------
+# backend-dispatch
+# ---------------------------------------------------------------------------
+
+def test_backend_dispatch_failing_fixture(tmp_path, capsys):
+    write(tmp_path, "src/repro/serve/bad.py", """
+        from repro.kernels.bna_step.ops import bna_step_batch
+        import repro.kernels.coflow_merge
+    """)
+    found = rule_findings(tmp_path, "backend-dispatch")
+    assert len(found) == 2
+    assert_cli_flags(tmp_path, "backend-dispatch", capsys)
+
+
+def test_backend_dispatch_passing_fixture(tmp_path):
+    src = "from repro.kernels.bna_step.ops import bna_step_batch\n"
+    # the four sanctioned homes for direct kernel imports
+    write(tmp_path, "src/repro/core/backend.py", src)
+    write(tmp_path, "src/repro/core/pipeline.py", src)
+    write(tmp_path, "src/repro/kernels/other/ops.py", src)
+    write(tmp_path, "tests/test_k.py", src)
+    write(tmp_path, "benchmarks/kbench.py", src)
+    assert rule_findings(tmp_path, "backend-dispatch") == []
+
+
+# ---------------------------------------------------------------------------
+# overflow-guard
+# ---------------------------------------------------------------------------
+
+def test_overflow_guard_failing_fixture(tmp_path, capsys):
+    write(tmp_path, "src/repro/kernels/fake/ops.py", """
+        def fake_kernel(x):
+            return x + 1
+    """)
+    found = rule_findings(tmp_path, "overflow-guard")
+    assert len(found) == 1 and "no int32 overflow guard" in found[0].message
+    assert_cli_flags(tmp_path, "overflow-guard", capsys)
+
+
+def test_overflow_guard_needs_escape(tmp_path):
+    # sentinel + guard branch, but neither a ref fallback nor a raise
+    write(tmp_path, "src/repro/kernels/fake/ops.py", """
+        import numpy as np
+        _I32_MAX = int(np.iinfo(np.int32).max)
+
+        def fake_kernel(x, n):
+            if n >= _I32_MAX:
+                n = 0
+            return x
+    """)
+    found = rule_findings(tmp_path, "overflow-guard")
+    assert len(found) == 1 and "no escape" in found[0].message
+
+
+def test_overflow_guard_passing_fixtures(tmp_path):
+    # the bna_step shape: guard + raise
+    write(tmp_path, "src/repro/kernels/fake/ops.py", """
+        import numpy as np
+        _I32_MAX = int(np.iinfo(np.int32).max)
+
+        def fake_kernel(x, n):
+            if n >= _I32_MAX:
+                raise ValueError("too large for int32 kernel")
+            return x
+    """)
+    # the merge_fix shape: guard + ref fallback import
+    write(tmp_path, "src/repro/kernels/fake2/ops.py", """
+        import numpy as np
+        from .ref import fake_ref
+        _INT32_MAX = np.int64(2**31 - 1)
+
+        def fake_kernel(x, n):
+            if n >= _INT32_MAX:
+                return fake_ref(x)
+            return x
+    """)
+    # non-ops kernel files are out of scope
+    write(tmp_path, "src/repro/kernels/fake/helpers.py", "def h(x): return x\n")
+    assert rule_findings(tmp_path, "overflow-guard") == []
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+def test_jit_purity_failing_fixture(tmp_path, capsys):
+    write(tmp_path, "src/repro/core/jitbad.py", """
+        import jax
+        import numpy as np
+        from jax import lax
+
+        state = {}
+
+        def body(c):
+            print(c)
+            x = np.cumsum(c)
+            state["last"] = x
+            if c:
+                x = x + 1
+            return x
+
+        stepped = jax.jit(body)
+        looped = lax.while_loop(lambda c: np.any(c), body, 0)
+    """)
+    found = rule_findings(tmp_path, "jit-purity")
+    msgs = " | ".join(f.message for f in found)
+    assert "print" in msgs
+    assert "numpy" in msgs
+    assert "closed-over" in msgs
+    assert "truthiness" in msgs
+    assert_cli_flags(tmp_path, "jit-purity", capsys)
+
+
+def test_jit_purity_passing_fixture(tmp_path):
+    write(tmp_path, "src/repro/core/jitok.py", """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        _CAP = int(np.iinfo(np.int32).max)   # trace-time constant: fine
+
+        def body(c):
+            d = dict(c)          # local mutation is fine
+            d["x"] = jnp.sum(c["x"])
+            return d
+
+        stepped = jax.jit(body)
+
+        def host(c):
+            print(c)             # not staged into any jit entry
+            return np.sum(c)
+    """)
+    assert rule_findings(tmp_path, "jit-purity") == []
+
+
+# ---------------------------------------------------------------------------
+# frozen-core-types
+# ---------------------------------------------------------------------------
+
+def test_frozen_core_types_failing_fixture(tmp_path, capsys):
+    write(tmp_path, "src/repro/dist/bad.py", """
+        from repro.core.types import Instance
+        from repro.core.timeline import FinalSchedule
+
+        def tweak(inst: Instance, events, m):
+            inst.jobs = []
+            sched = FinalSchedule(m, 0.0, events, None, None)
+            sched.ledger.append((0, 1.0))
+            return sched
+    """)
+    found = rule_findings(tmp_path, "frozen-core-types")
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 2
+    assert "Instance" in msgs and "FinalSchedule" in msgs
+    assert_cli_flags(tmp_path, "frozen-core-types", capsys)
+
+
+def test_frozen_core_types_passing_fixture(tmp_path):
+    # defining modules own in-place construction; untracked vars are free
+    write(tmp_path, "src/repro/core/timeline.py", """
+        class FinalSchedule:
+            pass
+
+        def build(m):
+            sched = FinalSchedule()
+            sched.ledger = []
+            sched.ledger.append((0, 1.0))
+            return sched
+    """)
+    write(tmp_path, "src/repro/dist/ok.py", """
+        from repro.core.types import Instance
+        import dataclasses
+
+        def reweight(inst: Instance, w):
+            alphas = inst.alphas          # reads are fine
+            other = {}
+            other["x"] = 1                # untracked mutation is fine
+            return dataclasses.replace(inst, weights=w)
+    """)
+    assert rule_findings(tmp_path, "frozen-core-types") == []
+
+
+# ---------------------------------------------------------------------------
+# pragma-discipline + suppression semantics
+# ---------------------------------------------------------------------------
+
+def test_pragma_suppresses_with_justification(tmp_path):
+    write(tmp_path, "src/repro/serve/ok.py", """
+        # repro: allow(backend-dispatch): fixture exercising the resolved dispatch site exemption
+        from repro.kernels.bna_step.ops import bna_step_batch
+
+        from repro.kernels.coflow_merge.ops import edge_interval_alphas  # repro: allow(backend-dispatch): same-line pragma fixture justification
+    """)
+    rep = scan_paths([tmp_path], root=tmp_path, project=False)
+    assert [f.rule for f in rep.unsuppressed] == []
+    assert len([f for f in rep.suppressed
+                if f.rule == "backend-dispatch"]) == 2
+    assert main([str(tmp_path), "--root", str(tmp_path), "--strict"]) == 0
+
+
+def test_pragma_without_justification_suppresses_nothing(tmp_path, capsys):
+    write(tmp_path, "src/repro/serve/bad.py", """
+        # repro: allow(backend-dispatch)
+        from repro.kernels.bna_step.ops import bna_step_batch
+    """)
+    rep = scan_paths([tmp_path], root=tmp_path, project=False)
+    rules = {f.rule for f in rep.unsuppressed}
+    # the original finding survives AND the bare pragma is itself flagged
+    assert rules == {"backend-dispatch", "pragma-discipline"}
+    assert_cli_flags(tmp_path, "pragma-discipline", capsys)
+
+
+def test_pragma_unknown_rule_flagged(tmp_path):
+    write(tmp_path, "src/repro/core/x.py", """
+        x = 1  # repro: allow(not-a-rule): justification long enough here
+    """)
+    found = rule_findings(tmp_path, "pragma-discipline")
+    assert len(found) == 1 and "unknown rule" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# registry-consistency (live-registry drift, injected and cleaned up)
+# ---------------------------------------------------------------------------
+
+def _scan_registry_rule(tmp_path):
+    write(tmp_path, "placeholder.py", "x = 1\n")
+    return scan_paths([tmp_path], root=tmp_path,
+                      rules=["registry-consistency"], project=True)
+
+
+def test_registry_consistency_clean_on_real_registries(tmp_path):
+    rep = _scan_registry_rule(tmp_path)
+    assert [f.message for f in rep.unsuppressed] == []
+
+
+def test_registry_consistency_flags_scheduler_drift(tmp_path):
+    from repro.core import engine
+
+    def _base(instance, *, decompose=False):
+        return None
+
+    @engine.register_scheduler("zz_drift_fixture", "drift fixture",
+                               options=("decompose", "seed", "exec"))
+    def _drift(instance, *, exec="packet", **opts):
+        return _base(instance, **opts)
+
+    try:
+        rep = _scan_registry_rule(tmp_path)
+        hits = [f for f in rep.unsuppressed
+                if "zz_drift_fixture" in f.message]
+        # `seed` is declared but nothing in the chain accepts it
+        assert len(hits) == 1 and "'seed'" in hits[0].message
+        assert hits[0].path.endswith("tests/test_analysis.py")
+    finally:
+        del engine._REGISTRY["zz_drift_fixture"]
+
+
+def test_registry_consistency_flags_scenario_drift(tmp_path):
+    from repro.scenarios import registry as sreg
+
+    @sreg.register("zz_scen_fixture", "drift fixture")
+    def _scen(*, m=None, seed=0):   # violates the m/seed/scale convention
+        raise AssertionError("never built")
+
+    try:
+        rep = _scan_registry_rule(tmp_path)
+        hits = [f for f in rep.unsuppressed
+                if "zz_scen_fixture" in f.message]
+        assert any("'scale'" in f.message for f in hits)
+    finally:
+        del sreg._REGISTRY["zz_scen_fixture"]
+
+
+# ---------------------------------------------------------------------------
+# CLI surface + self-scan
+# ---------------------------------------------------------------------------
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("rng-discipline", "backend-dispatch", "overflow-guard",
+                 "jit-purity", "frozen-core-types", "registry-consistency",
+                 "pragma-discipline"):
+        assert rule in out
+
+
+def test_cli_non_strict_exits_zero_on_findings(tmp_path, capsys):
+    write(tmp_path, "src/repro/serve/bad.py",
+          "from repro.kernels.bna_step.ops import x\n")
+    assert main([str(tmp_path), "--root", str(tmp_path)]) == 0
+    assert "backend-dispatch" in capsys.readouterr().out
+
+
+def test_self_scan_repo_is_clean_under_strict(capsys):
+    rc = main([str(REPO / "src"), str(REPO / "benchmarks"),
+               "--root", str(REPO), "--strict"])
+    out = capsys.readouterr().out
+    assert rc == 0, f"repo not clean under --strict:\n{out}"
+    assert "0 finding(s)" in out
