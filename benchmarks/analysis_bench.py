@@ -1,24 +1,37 @@
 """Static-analysis smoke: time the full-repo contract scan so the pass's
 own cost is tracked in benchmarks.csv alongside the things it guards.
 
-Two rows: the file-scope AST rules alone (pure parsing + visitors), and
-the full scan including the inspect-based registry-consistency rule
-(which imports the live registries and builds every scenario at small
-scale — the dominant cost)."""
+Three rows: the file-scope AST rules alone (pure parsing + visitors),
+the program-scope dataflow rules alone (interval engine + taint + call
+graph — the PR-9 layer), and the full scan including the inspect-based
+registry-consistency rule (which imports the live registries and builds
+every scenario at small scale).  The full-scan wall time is written to
+``benchmarks/results/BENCH_analysis.json`` and asserted under the CI
+budget — the analyzer guards every PR, so its cost is itself a
+regression surface.
+"""
 from __future__ import annotations
 
+import sys
 from pathlib import Path
 
 from repro.analysis import names, scan_paths
 
-from .common import emit, timed2
+from .common import emit, save_json, timed2
 
 ROOT = Path(__file__).resolve().parents[1]
+
+# hard CI budget for one full --strict scan (seconds); the gate runs on
+# every PR, so analyzer slowdowns past this fail the analysis bench job
+BUDGET_S = 30.0
+
+_DATAFLOW = ["overflow-range", "tracer-taint", "cache-key"]
 
 
 def run(fast: bool = True) -> None:
     paths = [ROOT / "src", ROOT / "benchmarks"]
-    file_rules = [n for n in names() if n != "registry-consistency"]
+    file_rules = [n for n in names()
+                  if n != "registry-consistency" and n not in _DATAFLOW]
 
     rep, us, comp, steady = timed2(
         scan_paths, paths, root=ROOT, rules=file_rules, reps=2 if fast else 3)
@@ -29,15 +42,43 @@ def run(fast: bool = True) -> None:
          interpret=False)
 
     rep, us, comp, steady = timed2(
+        scan_paths, paths, root=ROOT, rules=_DATAFLOW, reps=2 if fast else 3)
+    emit("analysis_dataflow_rules", us,
+         f"files={rep.n_files};rules={len(_DATAFLOW)};"
+         f"findings={len(rep.unsuppressed)};suppressed={len(rep.suppressed)}",
+         compile_ms=comp, steady_ms=steady, backend="python",
+         interpret=False)
+    dataflow_ms = steady
+
+    rep, us, comp, steady = timed2(
         scan_paths, paths, root=ROOT, project=True, reps=2 if fast else 3)
     emit("analysis_full_repo_scan", us,
          f"files={rep.n_files};rules={len(names())};"
          f"findings={len(rep.unsuppressed)};suppressed={len(rep.suppressed)}",
          compile_ms=comp, steady_ms=steady, backend="python",
          interpret=False)
+
+    wall_s = steady / 1e3
+    payload = {
+        "files": rep.n_files,
+        "rules": len(names()),
+        "findings": len(rep.unsuppressed),
+        "suppressed": len(rep.suppressed),
+        "dataflow_rules_ms": round(dataflow_ms, 2),
+        "full_scan_ms": round(steady, 2),
+        "budget_s": BUDGET_S,
+        "within_budget": wall_s < BUDGET_S,
+    }
+    save_json("BENCH_analysis", payload)
     if rep.unsuppressed:
         print(f"analysis: WARNING {len(rep.unsuppressed)} unsuppressed "
               "finding(s) — the static-analysis CI gate will fail")
+    if wall_s >= BUDGET_S:
+        print(f"analysis: FAIL full scan took {wall_s:.1f}s "
+              f">= {BUDGET_S:.0f}s budget", file=sys.stderr)
+        sys.exit(1)
+    print(f"analysis: full scan {wall_s:.2f}s "
+          f"(dataflow {dataflow_ms / 1e3:.2f}s) within {BUDGET_S:.0f}s budget")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,18 @@ justification (the ``pragma-discipline`` rule rejects bare pragmas)::
 
     from repro.kernels.bna_step.ops import bna_step_batch  # repro: allow(backend-dispatch): this IS the resolved dispatch site
 
+File-scope rules like the one above see one ``FileContext`` at a time.
+Rules registered with ``scope="program"`` instead receive a
+:class:`ProgramContext` — every scanned file plus a lazily-built
+whole-program symbol index — and run on the dataflow layer in
+:mod:`repro.analysis.flow` (interval/shape abstract interpretation,
+interprocedural taint, call-graph reachability).  The
+``repro.analysis.flow`` package docstring is the step-by-step guide to
+writing one.  ``--strict`` gates against the checked-in
+``analysis_baseline.json`` ratchet (new findings fail, stale entries
+fail, the baseline only shrinks); ``--sarif`` / ``--github`` emit
+machine-readable output for CI.
+
 See the README "Static analysis" section for the rule table.
 """
 from __future__ import annotations
@@ -44,6 +56,7 @@ from .pragmas import PRAGMA_RE, parse_allows
 __all__ = [
     "Finding",
     "FileContext",
+    "ProgramContext",
     "Rule",
     "Report",
     "register_rule",
@@ -115,6 +128,24 @@ class FileContext:
         return Finding(rule, self.rel, line, message, hint)
 
 
+@dataclass
+class ProgramContext:
+    """Everything a program-scope (dataflow) rule sees: every scanned
+    FileContext plus a lazily-built whole-program symbol index
+    (:class:`repro.analysis.flow.modules.ProjectIndex`).  See the
+    :mod:`repro.analysis.flow` docstring for the rule-writing guide."""
+
+    files: list[FileContext]
+    _index: object = None
+
+    @property
+    def index(self):
+        if self._index is None:
+            from .flow.modules import ProjectIndex
+            self._index = ProjectIndex(self.files)
+        return self._index
+
+
 _CheckFn = Callable[..., "Iterable[Finding]"]
 
 
@@ -124,7 +155,9 @@ class Rule:
 
     scope="file" checkers receive a FileContext per scanned file;
     scope="project" checkers run once per scan (inspect-based rules that
-    import the live registries) and receive no arguments."""
+    import the live registries) and receive no arguments;
+    scope="program" checkers run once per scan over a ProgramContext
+    (whole-program dataflow rules)."""
 
     name: str
     doc: str
@@ -138,8 +171,9 @@ _REGISTRY: dict[str, Rule] = {}
 def register_rule(name: str, doc: str = "", scope: str = "file"):
     """Register ``check(ctx) -> Iterable[Finding]`` under ``name``
     (decorator) — the scheduler-registry idiom applied to lint rules."""
-    if scope not in ("file", "project"):
-        raise ValueError(f"rule scope must be file|project, got {scope!r}")
+    if scope not in ("file", "project", "program"):
+        raise ValueError(
+            f"rule scope must be file|project|program, got {scope!r}")
 
     def deco(check: _CheckFn) -> _CheckFn:
         if name in _REGISTRY:
@@ -266,9 +300,11 @@ def scan_paths(paths: Iterable[str | Path], root: str | Path | None = None,
         active = [get(n) for n in rules]
     file_rules = [r for r in active if r.scope == "file"]
     project_rules = [r for r in active if r.scope == "project"]
+    program_rules = [r for r in active if r.scope == "program"]
 
     allow_index = _AllowIndex()
     findings: list[Finding] = []
+    contexts: list[FileContext] = []
     n_files = 0
     scanned_repro = False
     for path in iter_python_files(paths):
@@ -287,8 +323,14 @@ def scan_paths(paths: Iterable[str | Path], root: str | Path | None = None,
                 "fix the syntax error; no rule can check an unparsable file"))
             continue
         ctx = FileContext(path, rel, source, tree, source.splitlines())
+        contexts.append(ctx)
         for rule in file_rules:
             findings.extend(rule.check(ctx))
+
+    if program_rules and contexts:
+        prog = ProgramContext(contexts)
+        for rule in program_rules:
+            findings.extend(rule.check(prog))
 
     if project is None:
         project = scanned_repro

@@ -1,33 +1,60 @@
 """CLI: ``PYTHONPATH=src python -m repro.analysis [--strict] [paths...]``.
 
 Prints one block per finding (``path:line: rule: message`` + fix hint)
-and a summary line; ``--strict`` exits 1 on any unsuppressed finding
-(the contract the ``static-analysis`` CI job enforces).  Default paths:
-``src benchmarks``.
+and a summary line; ``--strict`` exits 1 on any unsuppressed finding not
+recorded in the baseline, and on stale baseline entries (the
+no-new-findings ratchet the ``static-analysis`` CI job enforces).
+``--sarif`` writes a SARIF 2.1.0 log, ``--github`` prints GitHub Actions
+workflow annotations.  Default paths: ``src benchmarks``.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from pathlib import Path
 
 from . import available, names, scan_paths
+from . import baseline as baseline_mod
+from .baseline import DEFAULT_BASELINE
+from .sarif import to_sarif
+
+
+def _github_annotation(f) -> str:
+    # newlines are %0A-escaped per the workflow-command grammar
+    msg = (f.message + (f" [fix: {f.hint}]" if f.hint else "")).replace(
+        "%", "%25").replace("\r", "%0D").replace("\n", "%0A")
+    return (f"::error file={f.path},line={f.line},"
+            f"title=repro-analysis {f.rule}::{msg}")
 
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repo-aware static contract checker (rng-discipline, "
-                    "backend-dispatch, overflow-guard, jit-purity, "
-                    "frozen-core-types, registry-consistency, "
-                    "pragma-discipline)")
+        description="repo-aware static contract checker: syntactic rules "
+                    "(rng-discipline, backend-dispatch, overflow-guard, "
+                    "jit-purity, frozen-core-types, registry-consistency, "
+                    "pragma-discipline) plus whole-program dataflow rules "
+                    "(overflow-range, tracer-taint, cache-key)")
     ap.add_argument("paths", nargs="*",
                     help="files/directories to scan (default: src "
                          "benchmarks)")
     ap.add_argument("--strict", action="store_true",
-                    help="exit 1 on any unsuppressed finding")
+                    help="exit 1 on findings above the baseline or stale "
+                         "baseline entries")
     ap.add_argument("--json", action="store_true",
                     help="emit findings as a JSON array")
+    ap.add_argument("--sarif", metavar="FILE", default=None,
+                    help="write a SARIF 2.1.0 log to FILE ('-' for stdout)")
+    ap.add_argument("--github", action="store_true",
+                    help="print GitHub Actions ::error annotations for "
+                         "findings above the baseline")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE} "
+                         "under --root when present)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this run's findings "
+                         "and exit 0")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule registry and exit")
     ap.add_argument("--rule", action="append", default=None,
@@ -51,6 +78,37 @@ def main(argv: list[str] | None = None) -> int:
 
     report = scan_paths(args.paths or ["src", "benchmarks"],
                         root=args.root, rules=args.rule)
+
+    root = Path(args.root or ".")
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / DEFAULT_BASELINE
+    if args.update_baseline:
+        baseline_mod.write(baseline_path, report)
+        print(f"baseline {baseline_path} updated: "
+              f"{len(report.unsuppressed)} finding(s) recorded")
+        return 0
+    try:
+        entries = baseline_mod.load(baseline_path)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    bdiff = baseline_mod.diff(report, entries)
+
+    if args.sarif:
+        log = to_sarif(report, available())
+        text = json.dumps(log, indent=2, sort_keys=True)
+        if args.sarif == "-":
+            print(text)
+        else:
+            Path(args.sarif).write_text(text + "\n")
+    if args.github:
+        for f in bdiff.new:
+            print(_github_annotation(f))
+        for e in bdiff.stale:
+            print("::error title=repro-analysis stale-baseline::baseline "
+                  f"entry no longer reproduces: {e.get('rule')} at "
+                  f"{e.get('path')}; run --update-baseline")
+
     if args.json:
         print(json.dumps([f.to_dict() for f in report.findings], indent=2))
     else:
@@ -58,10 +116,16 @@ def main(argv: list[str] | None = None) -> int:
             else report.unsuppressed
         for f in shown:
             print(f.render())
+        for e in bdiff.stale:
+            print(f"stale baseline entry (no longer reproduces): "
+                  f"{e.get('rule')}: {e.get('path')}: {e.get('message')}")
+        baselined = len(report.unsuppressed) - len(bdiff.new)
+        extra = f", {baselined} baselined" if baselined else ""
         print(f"checked {report.n_files} files: "
-              f"{len(report.unsuppressed)} finding(s), "
+              f"{len(report.unsuppressed)} finding(s){extra}, "
               f"{len(report.suppressed)} suppressed")
-    return 1 if (args.strict and not report.ok()) else 0
+
+    return 1 if (args.strict and not bdiff.ok()) else 0
 
 
 if __name__ == "__main__":

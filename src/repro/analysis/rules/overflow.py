@@ -1,9 +1,20 @@
-"""overflow-guard: every kernel ``ops.py`` lowers to Pallas programs with
-int32 index/accumulator arithmetic (TPU-native), so each must bound the
+"""overflow-guard: the syntactic half of the int32 launch contract.
+
+Every kernel ``ops.py`` lowers to Pallas programs with int32
+index/accumulator arithmetic (TPU-native), so each must bound the
 element/index space against ``np.iinfo(np.int32).max`` before launching
 and either fall back to the numpy/jnp reference (the ``merge_fix``
 pattern) or raise loudly (the ``bna_step`` pattern) — never wrap
-silently."""
+silently.
+
+This rule is deliberately shallow — "a sentinel-comparing guard with an
+escape exists" — and is kept as the fast, fixture-friendly first line.
+*Sufficiency* (does the guard dominate every launch, does it cover every
+operand's element count on every path) is proven by the program-scope
+``overflow-range`` rule in :mod:`repro.analysis.rules.overflow_range`,
+which runs the interval engine over the same files; a file can pass this
+rule and still fail ``overflow-range``, and that is the designed split.
+"""
 from __future__ import annotations
 
 import ast
@@ -16,7 +27,9 @@ _I32_MAX = 2**31 - 1
 
 _HINT = ("compare the padded element/index count against "
          "np.iinfo(np.int32).max and fall back to the ref implementation "
-         "(kernels/merge_fix/ops.py) or raise (kernels/bna_step/ops.py)")
+         "(kernels/merge_fix/ops.py) or raise (kernels/bna_step/ops.py); "
+         "overflow-range then proves the bound covers every launch "
+         "operand")
 
 
 def _mentions_sentinel(node: ast.AST) -> bool:
@@ -53,7 +66,8 @@ def _has_ref_import(tree: ast.AST) -> bool:
 
 @register_rule("overflow-guard",
                "kernel ops.py must guard int32 index/accumulator space "
-               "and fall back to the numpy ref (or raise) past it")
+               "with a ref fallback or raise (sufficiency is proven "
+               "separately by overflow-range)")
 def _overflow_guard(ctx: FileContext):
     if not re.search(r"repro/kernels/[^/]+/ops\.py$", ctx.rel):
         return

@@ -1,0 +1,90 @@
+"""overflow-range: *prove* each Pallas launch's int32 index space bounded.
+
+The file-scope ``overflow-guard`` rule checks a guard exists; this
+program-scope rule checks the guard is *sufficient*.  Every top-level
+function in a kernel ``ops.py`` is run through the interval engine
+(:class:`repro.analysis.flow.intervals.FlowInterp`): at each call that
+resolves to a kernel implementation module (``repro.kernels.<k>.<impl>``
+with ``<impl>`` neither ``ops`` nor ``ref`` — the ``*_padded`` Pallas
+entries), every array operand's element count must be provably
+``<= np.iinfo(np.int32).max`` on every path reaching the launch — by a
+concrete interval bound, by a dominating guard on the same canonical
+count expression, or by factor-cover of a guard-bounded product.
+Anything unproven is reported with the symbolic count expression, which
+is the engine saying "this is the operand a crafted input can overflow".
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from .. import ProgramContext, register_rule
+from ..flow.intervals import (AVal, FlowInterp, I32_MAX, count_expr_str,
+                              prove_count)
+from ._util import dotted
+
+_OPS_RE = re.compile(r"repro/kernels/[^/]+/ops\.py$")
+_HINT = ("bound the padded element count of every launch operand before "
+         "launching — raise or fall back to the ref path past "
+         "np.iinfo(np.int32).max, and validate input shapes "
+         "(`if b.shape != (B, S, G, N): raise`) so one guard covers "
+         "operands whose dims the guard expression never mentions")
+
+
+def _is_launch(fqn: str | None, index) -> bool:
+    """Does `fqn` name a function in a kernel implementation module?"""
+    if not fqn or not fqn.startswith("repro.kernels."):
+        return False
+    owner, tail = index.split(fqn)
+    if owner is None or not tail or "." in tail:
+        return False
+    parts = owner.name.split(".")
+    return len(parts) == 4 and parts[-1] not in ("ops", "ref")
+
+
+@register_rule("overflow-range",
+               "interval engine must prove every Pallas launch operand's "
+               "element count fits int32 on every path",
+               scope="program")
+def _overflow_range(ctx: ProgramContext):
+    index = ctx.index
+    for fc in ctx.files:
+        if not _OPS_RE.search(fc.rel):
+            continue
+        mi = index.by_rel.get(fc.rel)
+        if mi is None:
+            continue
+        findings: dict[tuple, tuple] = {}   # (line, argpos) -> finding args
+
+        def on_call(node, env, args, kwargs, mi=mi, findings=findings):
+            parts = dotted(node.func)
+            if parts is None:
+                return
+            fqn = index.resolve(mi, ".".join(parts))
+            if not _is_launch(fqn, index):
+                return
+            callee = parts[-1]
+            for pos, val in enumerate(
+                    list(args) + [kwargs[k] for k in sorted(kwargs)]):
+                if not isinstance(val, AVal):
+                    continue
+                if prove_count(val, env, I32_MAX):
+                    # proven on this path; an earlier path may have failed
+                    # — keep that failure (must hold on EVERY path)
+                    continue
+                key = (node.lineno, pos)
+                findings.setdefault(key, (
+                    node,
+                    f"cannot prove operand {pos} of {callee}() fits "
+                    f"int32: element count {count_expr_str(val, env)} "
+                    f"is unbounded on some path"))
+
+        interp = FlowInterp(index, mi, on_call=on_call)
+        for stmt in mi.ctx.tree.body:
+            if isinstance(stmt, ast.FunctionDef):
+                try:
+                    interp.run_function(stmt)
+                except Exception:
+                    pass
+        for (line, _pos), (node, msg) in sorted(findings.items()):
+            yield fc.finding("overflow-range", node, msg, _HINT)

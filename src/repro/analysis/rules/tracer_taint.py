@@ -1,0 +1,128 @@
+"""tracer-taint: interprocedural jit purity through the taint engine.
+
+``jit-purity`` pattern-matches the staged body itself (host numpy calls,
+``print``, bare ``if param:``).  This rule runs
+:class:`repro.analysis.flow.taint.TaintAnalyzer` over every function
+staged into a jit entry in ``repro/core``: parameters and ``jax``/``jnp``/
+``lax`` results are tracers, taint flows through locals *and into project
+helpers called from the staged body*, and any Python ``if``/``while``/
+``assert``/comprehension-filter on a tainted expression, numpy
+materialization (``np.asarray``, ``float()``, ``.item()``), or host side
+effect on a tainted value is reported at its source line — including
+lines in a helper module the syntactic rule never looks at.
+
+``jax.jit`` ``static_argnums``/``static_argnames`` parameters are seeded
+untainted (they really are Python values at trace time).
+"""
+from __future__ import annotations
+
+import ast
+
+from .. import ProgramContext, register_rule
+from ..flow.taint import TaintAnalyzer
+from ._util import import_aliases, resolve
+from .purity import _JIT_ENTRY, _jitted_functions
+
+_KIND_HINTS = {
+    "branch": "use lax.cond / lax.while_loop / jnp.where, or mark the "
+              "driving argument static",
+    "assert": "use checkify or validate before staging; `assert` on a "
+              "tracer fails at trace time",
+    "materialize": "stay in jnp inside jitted bodies; materializing a "
+                   "tracer raises TracerArrayConversionError (or freezes "
+                   "a trace-time constant)",
+    "host": "use jax.debug.print / io_callback, or hoist the side effect "
+            "out of the staged body",
+}
+
+
+def _static_params(tree: ast.AST, fn: ast.AST,
+                   aliases: dict[str, str]) -> frozenset[str]:
+    """Parameter names marked static at this function's jit sites."""
+    names = _param_list(fn)
+    static: set[str] = set()
+    fname = getattr(fn, "name", None)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        full = resolve(node.func, aliases)
+        if full not in _JIT_ENTRY:
+            continue
+        hits = fname is not None and any(
+            isinstance(a, ast.Name) and a.id == fname
+            for a in node.args)
+        if not hits:
+            continue
+        for kw in node.keywords:
+            if kw.arg == "static_argnames":
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) and \
+                            isinstance(c.value, str):
+                        static.add(c.value)
+            elif kw.arg == "static_argnums":
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) and \
+                            isinstance(c.value, int) and \
+                            c.value < len(names):
+                        static.add(names[c.value])
+    # decorator form: @partial(jax.jit, static_argnums=...)
+    for dec in getattr(fn, "decorator_list", []):
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for c in ast.walk(kw.value):
+                        if isinstance(c, ast.Constant) and \
+                                isinstance(c.value, str):
+                            static.add(c.value)
+                elif kw.arg == "static_argnums":
+                    for c in ast.walk(kw.value):
+                        if isinstance(c, ast.Constant) and \
+                                isinstance(c.value, int) and \
+                                c.value < len(names):
+                            static.add(names[c.value])
+    return frozenset(static)
+
+
+def _param_list(fn: ast.AST) -> list[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+@register_rule("tracer-taint",
+               "taint tracking through jitted stages: no Python control "
+               "flow, materialization, or host effects on traced values — "
+               "interprocedurally",
+               scope="program")
+def _tracer_taint(ctx: ProgramContext):
+    index = ctx.index
+    by_module = {mi.name: fc for fc in ctx.files
+                 for mi in [index.by_rel.get(fc.rel)] if mi is not None}
+    seen: set[tuple] = set()
+    for fc in ctx.files:
+        if not fc.in_core() or fc.in_testing():
+            continue
+        mi = index.by_rel.get(fc.rel)
+        if mi is None:
+            continue
+        aliases = import_aliases(fc.tree)
+        for fn, via in _jitted_functions(fc.tree, aliases):
+            analyzer = TaintAnalyzer(index)
+            static = _static_params(fc.tree, fn, aliases)
+            try:
+                found = analyzer.analyze_staged(fn, mi, static)
+            except RecursionError:
+                continue
+            name = getattr(fn, "name", "<lambda>")
+            for f in found:
+                line = getattr(f.node, "lineno", 1)
+                sig = (f.module.name, line, f.kind)
+                if sig in seen:
+                    continue
+                seen.add(sig)
+                target = by_module.get(f.module.name, fc)
+                where = "" if f.module is mi else \
+                    f" (reached from {name}() staged into {via})"
+                yield target.finding(
+                    "tracer-taint", f.node,
+                    f"{f.detail} inside a jitted stage{where}",
+                    _KIND_HINTS.get(f.kind, ""))

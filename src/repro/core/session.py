@@ -185,7 +185,14 @@ def execute_transcript(
         a = acc.setdefault(key, np.zeros_like(rem, dtype=np.float64))
         t = banked.setdefault(key, np.zeros_like(rem))
         a[e.srcs, e.dsts] += amount
-        avail = np.floor(a[e.srcs, e.dsts] + 1e-6).astype(np.int64) \
+        cur = a[e.srcs, e.dsts]
+        if cur.size and float(cur.max()) >= 2.0**53:
+            # past 2^53 float64 drops integer precision and the banked
+            # floor could silently lose (or invent) packets
+            raise ValueError(
+                "cumulative edge units exceed the float64 integer-exact "
+                f"range (2^53) for job {e.jid} coflow {e.cid}")
+        avail = np.floor(cur + 1e-6).astype(np.int64) \
             - t[e.srcs, e.dsts]
         take = np.minimum(np.maximum(avail, 0), rem[e.srcs, e.dsts])
         t[e.srcs, e.dsts] += take

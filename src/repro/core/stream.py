@@ -104,7 +104,14 @@ def arrival_times(
             p_flip = p_exit_burst if in_burst else p_enter_burst
             if rng.random() < p_flip:
                 in_burst = not in_burst
-    return np.floor(np.cumsum(gaps)).astype(np.int64)
+    cum = np.cumsum(gaps)
+    if cum.size and cum[-1] >= 2.0**53:
+        # float64 stops representing integers exactly at 2^53, so the
+        # floor below would no longer be the true integer release time
+        raise ValueError(
+            f"cumulative arrival time {cum[-1]:.3g} exceeds the float64 "
+            "integer-exact range (2^53); lower n or raise rate")
+    return np.floor(cum).astype(np.int64)
 
 
 # --- workload builder -------------------------------------------------------

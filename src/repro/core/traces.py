@@ -264,7 +264,13 @@ def poisson_releases(instance: Instance, theta: float, seed: int = 0) -> Instanc
     """Return a copy of the instance with Poisson(theta) arrival times."""
     rng = np.random.default_rng(seed + 2)
     gaps = rng.exponential(1.0 / theta, size=len(instance.jobs))
-    times = np.floor(np.cumsum(gaps)).astype(np.int64)
+    cum = np.cumsum(gaps)
+    if cum.size and cum[-1] >= 2.0**53:
+        # float64 integer exactness ends at 2^53; see stream.arrival_times
+        raise ValueError(
+            f"cumulative release time {cum[-1]:.3g} exceeds the float64 "
+            "integer-exact range (2^53); raise theta or shrink the instance")
+    times = np.floor(cum).astype(np.int64)
     jobs = []
     for j, t in zip(instance.jobs, times):
         import dataclasses

@@ -42,6 +42,11 @@ def bna_step_batch(
     b_pad = max(8, 1 << max(B - 1, 0).bit_length())
     lane = 8 if interpret else 128
     w_pad = max(lane, ((w + lane - 1) // lane) * lane)
+    if b_pad * w_pad * w_pad >= _I32_MAX:
+        raise ValueError(
+            "batch too large for the int32 bna_step kernel "
+            f"(padded element count {b_pad} * {w_pad}^2 >= 2^31-1); "
+            "use the numpy backend")
     bb = min(block_b or 128, b_pad)
 
     def pad2(a, fill=0):

@@ -32,6 +32,10 @@ def flash_attention(
     """Blocked attention; exact (same math as ref, different blocking)."""
     B, Hq, Sq, d = q.shape
     _, Hkv, Sk, _ = k.shape
+    if k.shape != (B, Hkv, Sk, d) or v.shape != k.shape:
+        raise ValueError(
+            f"flash_attention operand shapes disagree: q {q.shape}, "
+            f"k {k.shape}, v {v.shape}")
     assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
     if scale is None:
         scale = float(d) ** -0.5

@@ -45,6 +45,11 @@ def merge_fix_step(
     if interpret is None:
         interpret = default_interpret()
     E = int(np.asarray(t0).size)
+    if E >= int(_INT32_MAX):
+        # delta entries and alphas are activation counts bounded by E, and
+        # the kernel accumulates them in int32
+        raise ValueError("too many edge activations for the int32 "
+                         f"coflow_merge accumulator ({E} >= 2^31-1)")
     si = np.searchsorted(events, t0)
     ei = np.searchsorted(events, t1)
     delta = build_delta(jnp.asarray(si), jnp.asarray(ei), jnp.asarray(s),
@@ -53,8 +58,13 @@ def merge_fix_step(
         bk = min(block_k, max(8, 1 << (K - 1).bit_length()))
         k_pad = (-K) % bk
         p_pad = (-delta.shape[1]) % 128
-        dpad = jnp.pad(delta, ((0, k_pad), (0, p_pad)))
-        al = coflow_merge_padded(dpad, block_k=bk, interpret=interpret)[:K, 0]
+        if (K + k_pad) * (delta.shape[1] + p_pad) >= int(_INT32_MAX):
+            # padded index space would wrap int32 inside the kernel
+            al = alphas_ref(delta)
+        else:
+            dpad = jnp.pad(delta, ((0, k_pad), (0, p_pad)))
+            al = coflow_merge_padded(
+                dpad, block_k=bk, interpret=interpret)[:K, 0]
     else:
         al = alphas_ref(delta)
     lens = np.asarray(events[1:] - events[:-1], dtype=np.int64)

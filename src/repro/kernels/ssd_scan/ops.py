@@ -29,12 +29,17 @@ def ssd_scan(
         interpret = default_interpret()
     B, S, H, P = x.shape
     G, N = b.shape[2], b.shape[3]
+    if a.shape != (B, S, H) or b.shape != (B, S, G, N) or c.shape != b.shape:
+        raise ValueError(
+            f"ssd_scan operand shapes disagree: x {x.shape}, a {a.shape}, "
+            f"b {b.shape}, c {c.shape}")
     L = min(chunk, S)
     pad = (-S) % L
     # Pallas indexes the padded operands with int32 arithmetic; past that
-    # the associative-scan reference is the only correct path.
+    # the associative-scan reference is the only correct path.  loga is
+    # (B, Sp, H), so its count needs covering too (P may be 0).
     Sp = S + pad
-    if max(B * Sp * H * P, B * Sp * G * N) >= _I32_MAX:
+    if max(B * Sp * H * P, B * Sp * G * N, B * Sp * H) >= _I32_MAX:
         return ssd_ref(x, a, b, c)
     if pad:
         # padded steps use decay 1 (log 0) and zero inputs: state unchanged

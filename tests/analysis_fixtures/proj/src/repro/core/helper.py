@@ -1,0 +1,13 @@
+"""Helper called from a jitted stage in staged.py.  On its own this file
+is innocent — no jax import, no jit — which is exactly why the syntactic
+jit-purity rule never looks at it.  The taint engine follows the traced
+value into ``pick`` and flags the branch."""
+
+
+def pick(y, n):
+    if y[0] > 0:  # tracer-taint POSITIVE: Python branch on a traced value
+        return y * 2
+    total = 0
+    for i in range(n):  # negative: n is static at the jit boundary
+        total += i
+    return y + total

@@ -1,0 +1,52 @@
+"""cache-key fixtures: one caching function leaks a parameter into the
+value only, one reads an env knob the key omits, one is sound.  There is
+no syntactic rule for cache keys at all, so the positives are invisible
+to the PR-8 layer by construction."""
+import os
+
+
+class _LRU:
+    def __init__(self):
+        self._d = {}
+
+    def lookup(self, k):
+        return (k in self._d, self._d.get(k))
+
+    def store(self, k, v):
+        self._d[k] = v
+
+
+plan_cache = _LRU()
+
+
+def cached_plan(n, scale):
+    # cache-key POSITIVE: `scale` shapes the value but not the key
+    key = ("plan", n)
+    found, val = plan_cache.lookup(key)
+    if found:
+        return val
+    val = [i * scale for i in range(n)]
+    plan_cache.store(key, val)
+    return val
+
+
+def cached_env(n):
+    # cache-key POSITIVE: REPRO_FAKE_MODE changes the value, key omits it
+    key = ("env", n)
+    found, val = plan_cache.lookup(key)
+    if found:
+        return val
+    val = n * (2 if os.environ.get("REPRO_FAKE_MODE") == "x" else 1)
+    plan_cache.store(key, val)
+    return val
+
+
+def cached_sound(n, scale):
+    # cache-key NEGATIVE: every value input reaches the key
+    key = ("sound", n, scale)
+    found, val = plan_cache.lookup(key)
+    if found:
+        return val
+    val = [i * scale for i in range(n)]
+    plan_cache.store(key, val)
+    return val

@@ -1,0 +1,19 @@
+"""Jitted stage whose own body is clean (passes the syntactic jit-purity
+rule) but which hands a tracer to :func:`repro.core.helper.pick`, where
+a Python branch consumes it — only the interprocedural taint engine
+sees that."""
+import jax
+import jax.numpy as jnp
+
+from .helper import pick
+
+
+def step(x, n):
+    if x.shape[0] > 4:  # tracer-taint NEGATIVE: shapes are static
+        y = jnp.cumsum(x)
+    else:
+        y = jnp.cumsum(x) * 2
+    return pick(y, n)
+
+
+step_jit = jax.jit(step, static_argnames=("n",))

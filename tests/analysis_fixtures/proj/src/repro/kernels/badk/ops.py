@@ -1,0 +1,20 @@
+"""overflow-range POSITIVE that the syntactic overflow-guard rule
+accepts: a sentinel guard with a raise *exists* (so overflow-guard is
+happy), but it bounds ``B * w_pad`` while the second launch operand has
+``B * w_pad * w_pad`` elements — unprovable, and genuinely overflowable
+for crafted shapes."""
+import numpy as np
+
+from .badk import badk_padded
+
+_I32_MAX = int(np.iinfo(np.int32).max)
+
+
+def launch(x):
+    B, W = x.shape
+    w_pad = ((W + 127) // 128) * 128
+    if B * w_pad >= _I32_MAX:
+        raise ValueError("index space exceeds int32")
+    xp = np.zeros((B, w_pad), dtype=np.int32)
+    yp = np.zeros((B, w_pad, w_pad), dtype=np.int32)
+    return badk_padded(xp, yp)

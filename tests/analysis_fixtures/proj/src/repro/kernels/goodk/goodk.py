@@ -1,0 +1,6 @@
+"""Fake Pallas entry module (the `<impl>` slot the launch detector keys
+on: 4-part module, name neither ops nor ref)."""
+
+
+def goodk_padded(xp):
+    return xp

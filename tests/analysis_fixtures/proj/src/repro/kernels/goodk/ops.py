@@ -1,0 +1,16 @@
+"""overflow-range NEGATIVE: the guard's product bound covers the launch
+operand's element count exactly, so the interval engine proves it."""
+import numpy as np
+
+from .goodk import goodk_padded
+
+_I32_MAX = int(np.iinfo(np.int32).max)
+
+
+def launch(x):
+    B, W = x.shape
+    w_pad = ((W + 127) // 128) * 128
+    if B * w_pad >= _I32_MAX:
+        raise ValueError("index space exceeds int32")
+    xp = np.zeros((B, w_pad), dtype=np.int32)
+    return goodk_padded(xp)

@@ -1,0 +1,224 @@
+"""Dataflow layer tests: the fixture corpus (known positives the PR-8
+syntactic rules cannot see, known negatives the engine must prove), the
+interval/symbolic engine primitives, the baseline ratchet, the SARIF
+emitter, and the self-check that the real tree is strict-clean."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Finding, Report, scan_paths
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.__main__ import main
+from repro.analysis.flow.intervals import IV, s_add, s_atom, s_const, s_mul
+from repro.analysis.sarif import to_sarif
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "analysis_fixtures" / "proj"
+
+DATAFLOW_RULES = ["overflow-range", "tracer-taint", "cache-key"]
+SYNTACTIC_RULES = ["rng-discipline", "backend-dispatch", "overflow-guard",
+                   "jit-purity", "frozen-core-types", "pragma-discipline"]
+
+
+@pytest.fixture(scope="module")
+def fixture_report():
+    return scan_paths([FIXTURES / "src"], root=FIXTURES,
+                      rules=DATAFLOW_RULES)
+
+
+def _by_rule(report, rule):
+    return [f for f in report.unsuppressed if f.rule == rule]
+
+
+# --------------------------------------------------------------------------
+# fixture corpus: positives caught, negatives proven
+# --------------------------------------------------------------------------
+
+def test_overflow_range_positive(fixture_report):
+    hits = _by_rule(fixture_report, "overflow-range")
+    assert len(hits) == 1
+    f = hits[0]
+    assert f.path == "src/repro/kernels/badk/ops.py"
+    assert "operand 1 of badk_padded()" in f.message
+    # the message names the unproven symbolic count, not just a location
+    assert "x.shape[0]" in f.message
+
+
+def test_overflow_range_negative(fixture_report):
+    assert not [f for f in _by_rule(fixture_report, "overflow-range")
+                if "goodk" in f.path]
+
+
+def test_tracer_taint_positive_is_interprocedural(fixture_report):
+    hits = _by_rule(fixture_report, "tracer-taint")
+    assert len(hits) == 1
+    f = hits[0]
+    # flagged in the helper module the syntactic rule never inspects,
+    # attributed back to the jit boundary it was reached from
+    assert f.path == "src/repro/core/helper.py"
+    assert "if" in f.message and "staged into jax.jit" in f.message
+
+
+def test_tracer_taint_negative(fixture_report):
+    # the staged body itself is clean: shape branch + static-arg loop
+    assert not [f for f in _by_rule(fixture_report, "tracer-taint")
+                if f.path.endswith("staged.py")]
+
+
+def test_cache_key_param_positive(fixture_report):
+    msgs = [f.message for f in _by_rule(fixture_report, "cache-key")]
+    assert any("cached_plan()" in m and "'scale'" in m for m in msgs)
+
+
+def test_cache_key_knob_positive(fixture_report):
+    msgs = [f.message for f in _by_rule(fixture_report, "cache-key")]
+    assert any("cached_env()" in m and "REPRO_FAKE_MODE" in m for m in msgs)
+
+
+def test_cache_key_negative(fixture_report):
+    assert not [f for f in _by_rule(fixture_report, "cache-key")
+                if "cached_sound" in f.message]
+
+
+def test_positives_invisible_to_syntactic_rules():
+    """The corpus' whole point: every dataflow positive passes PR-8."""
+    rep = scan_paths([FIXTURES / "src"], root=FIXTURES,
+                     rules=SYNTACTIC_RULES)
+    assert rep.unsuppressed == []
+
+
+# --------------------------------------------------------------------------
+# engine primitives
+# --------------------------------------------------------------------------
+
+def test_interval_arithmetic():
+    a, b = IV(2, 3), IV(-1, 4)
+    assert a.add(b) == IV(1, 7)
+    assert a.mul(b) == IV(-3, 12)
+    assert a.join(b) == IV(-1, 4)
+    assert a.meet(b) == IV(2, 3)
+
+
+def test_canonical_sym_cancellation():
+    x = s_atom("param:x")
+    # (x + 1) - x canonicalizes to the constant 1
+    assert s_add(s_add(x, s_const(1)), s_mul(s_const(-1), x)) == s_const(1)
+
+
+def test_canonical_sym_commutes():
+    x, y = s_atom("param:x"), s_atom("param:y")
+    assert s_mul(x, y) == s_mul(y, x)
+    assert s_add(x, y) == s_add(y, x)
+
+
+# --------------------------------------------------------------------------
+# baseline ratchet
+# --------------------------------------------------------------------------
+
+def _report(findings):
+    return Report(findings=findings, n_files=1)
+
+
+def test_baseline_diff_new_and_stale():
+    f = Finding("r", "src/a.py", 3, "boom")
+    d = baseline_mod.diff(_report([f]), [])
+    assert [x.message for x in d.new] == ["boom"] and not d.stale
+    entry = {"rule": "r", "path": "src/a.py", "message": "boom"}
+    d = baseline_mod.diff(_report([f]), [entry])
+    assert d.ok()
+    d = baseline_mod.diff(_report([]), [entry])
+    assert not d.new and d.stale == [entry]
+
+
+def test_baseline_is_line_insensitive_but_multiset_aware():
+    entry = {"rule": "r", "path": "src/a.py", "message": "boom"}
+    moved = Finding("r", "src/a.py", 99, "boom")
+    assert baseline_mod.diff(_report([moved]), [entry]).ok()
+    # a second identical finding is NOT absorbed by a single entry
+    d = baseline_mod.diff(_report([moved, Finding("r", "src/a.py", 7,
+                                                  "boom")]), [entry])
+    assert len(d.new) == 1
+
+
+def test_baseline_roundtrip_and_cli_update(tmp_path, capsys):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"version": 1, "findings": [
+        {"rule": "ghost", "path": "src/x.py", "message": "gone"}]}))
+    # stale entry fails strict even with zero findings
+    assert main(["--strict", "--baseline", str(bl),
+                 str(FIXTURES / "src" / "repro" / "kernels" / "goodk"),
+                 "--root", str(FIXTURES)]) == 1
+    assert "stale" in capsys.readouterr().out
+    # --update-baseline rewrites it and strict passes again
+    assert main(["--update-baseline", "--baseline", str(bl),
+                 str(FIXTURES / "src" / "repro" / "kernels" / "goodk"),
+                 "--root", str(FIXTURES)]) == 0
+    capsys.readouterr()
+    assert baseline_mod.load(bl) == []
+    assert main(["--strict", "--baseline", str(bl),
+                 str(FIXTURES / "src" / "repro" / "kernels" / "goodk"),
+                 "--root", str(FIXTURES)]) == 0
+
+
+def test_baseline_rejects_malformed(tmp_path):
+    bl = tmp_path / "bl.json"
+    bl.write_text("[]")
+    with pytest.raises(ValueError):
+        baseline_mod.load(bl)
+    bl.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        baseline_mod.load(bl)
+
+
+# --------------------------------------------------------------------------
+# SARIF + GitHub annotations
+# --------------------------------------------------------------------------
+
+def test_sarif_structure():
+    f = Finding("overflow-range", "src/a.py", 12, "too big", hint="guard it")
+    sup = Finding("cache-key", "src/b.py", 3, "knob", suppressed=True)
+    log = to_sarif(_report([f, sup]), {"overflow-range": "doc",
+                                       "cache-key": "doc2"})
+    assert log["version"] == "2.1.0"
+    run = log["runs"][0]
+    ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+    assert "overflow-range" in ids and "cache-key" in ids
+    res = {r["ruleId"]: r for r in run["results"]}
+    loc = res["overflow-range"]["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/a.py"
+    assert loc["region"]["startLine"] == 12
+    assert "fix: guard it" in res["overflow-range"]["message"]["text"]
+    assert res["cache-key"]["suppressions"][0]["kind"] == "inSource"
+
+
+def test_cli_sarif_and_github(tmp_path, capsys):
+    out = tmp_path / "log.sarif"
+    assert main(["--sarif", str(out), "--github",
+                 str(FIXTURES / "src"), "--root", str(FIXTURES),
+                 "--baseline", str(tmp_path / "none.json")]) == 0
+    log = json.loads(out.read_text())
+    results = log["runs"][0]["results"]
+    assert {r["ruleId"] for r in results} >= {"overflow-range",
+                                              "tracer-taint", "cache-key"}
+    text = capsys.readouterr().out
+    assert "::error file=src/repro/kernels/badk/ops.py" in text
+    assert "title=repro-analysis overflow-range" in text
+
+
+def test_cli_new_rules_listed(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("overflow-range", "tracer-taint", "cache-key"):
+        assert rule in out
+
+
+# --------------------------------------------------------------------------
+# self-check: the real tree is clean at --strict
+# --------------------------------------------------------------------------
+
+def test_repo_is_strict_clean():
+    assert main(["--strict", str(REPO / "src"), str(REPO / "benchmarks"),
+                 "--root", str(REPO)]) == 0
