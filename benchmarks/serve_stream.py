@@ -11,12 +11,18 @@ trace, and reports:
 * sustained jobs/sec of the whole feed+drain loop,
 * repair / full-replan / deferral / reject counts from ``SessionStats``.
 
-Two extra cell groups quantify this PR's repair-certification fixes and
-the backpressure policy:
+Three extra cell groups quantify the repair-certification fixes, the
+PR-10 pinned-gamma epochs, and the backpressure policy:
 
+* ``gamma="pinned"`` cells re-run every G-DM/G-DM-RT spread trace with
+  the session-stable grouping scale (core/gdm.py GammaEpoch) — the
+  pure-mode repair-hit-rate lift and the p95 latency delta vs the
+  residual-gamma cells are the PR-10 headline, and each pinned cell is
+  still asserted bit-identical to its own pinned batch comparator.  The
+  pinned pure cells must clear ``_PINNED_HIT_FLOOR`` (the CI gate).
 * ``repair="legacy"`` cells re-run the G-DM/G-DM-RT spread traces under
   the pre-generalization certification gate (singleton groups, gdm only)
-  — the before/after repair-hit-rate delta is the headline.
+  — the before/after repair-hit-rate delta was PR 7's headline.
 * an overload cell (load > 1, MMPP) attaches an
   :class:`~repro.core.session.AdmissionPolicy` and records deferrals,
   rejects, and the windowed replan debt the policy budgets on.
@@ -53,6 +59,9 @@ _SCHEDULERS = [
 _TRACE_SEED = 7
 _LOAD = 0.9
 _OVERLOAD = 2.0
+# CI floor for the pinned-gamma pure cells' repair hit rate: the tentpole
+# target (residual-gamma cells sat at ~6-8% before pinning)
+_PINNED_HIT_FLOOR = 0.4
 
 
 def _trace(n_jobs: int, process: str, load: float = _LOAD):
@@ -63,16 +72,20 @@ def _trace(n_jobs: int, process: str, load: float = _LOAD):
 def _cell(name: str, jobs, sched: str, opts: dict, *,
           repair: "bool | str" = True,
           admission: AdmissionPolicy | None = None,
+          gamma: "str | int" = "residual",
           check_batch: bool = True) -> dict:
-    drv = StreamDriver(_M, sched, repair=repair, admission=admission, **opts)
+    drv = StreamDriver(_M, sched, repair=repair, admission=admission,
+                       gamma=gamma, **opts)
     for j in jobs:
         drv.feed(j)
     res = drv.result()
     row = {"cell": name, "scheduler": sched, "n_jobs": len(jobs),
-           **res.as_dict()}
+           "gamma": gamma, **res.as_dict()}
+    if "group" in res.online.stats:   # group-block cache traffic this cell
+        row["group_cache"] = res.online.stats["group"]
     if check_batch:
         batch = simulate_online(Instance(_M, list(jobs)), sched,
-                                driver="batch", **opts)
+                                driver="batch", gamma=gamma, **opts)
         row["identical_to_batch"] = (
             res.online.job_completions == batch.job_completions
             and res.online.twct() == batch.twct())
@@ -89,6 +102,10 @@ def run(fast: bool = True, n_jobs: int | None = None) -> dict:
             n = n_jobs if n_jobs is not None else n_fast * scale
             jobs = _trace(n, process)
             rows.append(_cell(f"{process}_{label}", jobs, sched, opts))
+            if sched != "om_alg":
+                # PR-10 A/B: same trace under the session-pinned gamma
+                rows.append(_cell(f"{process}_{label}_pinned", jobs, sched,
+                                  opts, gamma="pinned"))
 
     # before/after for the two certification fixes: same poisson trace,
     # pre-generalization gate (legacy) vs the grouped certification
@@ -111,6 +128,26 @@ def run(fast: bool = True, n_jobs: int | None = None) -> dict:
             [round(hit(f"poisson_{label}"), 4), round(hit(f"legacy_{label}"), 4)]
         for label, _, _, _ in _SCHEDULERS[1:]
     }
+    # PR-10 A/B: pinned vs residual gamma, per process x scheduler — the
+    # pure-mode hit-rate lift (CI-floored) and the p95 latency delta
+    pinned_ab = {}
+    for process in ("poisson", "mmpp"):
+        for label, _, _, _ in _SCHEDULERS[1:]:
+            res_c, pin_c = f"{process}_{label}", f"{process}_{label}_pinned"
+            pinned_ab[pin_c] = {
+                "hit_rate_pinned_vs_residual":
+                    [round(hit(pin_c), 4), round(hit(res_c), 4)],
+                "p95_ms_pinned_vs_residual":
+                    [round(by_cell[pin_c]["p95_ms"], 3),
+                     round(by_cell[res_c]["p95_ms"], 3)],
+                "gamma_rescales": by_cell[pin_c]["session_gamma_rescales"],
+            }
+            assert hit(pin_c) >= _PINNED_HIT_FLOOR, (
+                f"{pin_c}: pinned-gamma pure-mode repair hit rate "
+                f"{hit(pin_c):.3f} fell below the {_PINNED_HIT_FLOOR} floor")
+            assert hit(pin_c) > hit(res_c), (
+                f"{pin_c}: pinning must lift the hit rate over the "
+                f"residual-gamma cell ({hit(pin_c):.3f} <= {hit(res_c):.3f})")
     backend, interpret = common.provenance()
     payload = {
         "m": _M, "mu": _MU, "trace_seed": _TRACE_SEED,
@@ -122,13 +159,19 @@ def run(fast: bool = True, n_jobs: int | None = None) -> dict:
                              "window": policy.window},
         "rows": rows,
         "hit_rate_deltas": deltas,
+        "pinned_vs_residual": pinned_ab,
+        "pinned_hit_floor": _PINNED_HIT_FLOOR,
         "note": ("pure cells (no admission) are asserted bit-identical to "
-                 "simulate_online(driver='batch') on the same trace; legacy "
-                 "cells re-run the pre-generalization repair gate — the "
-                 "hit-rate delta is the certification-bugfix payoff; the "
-                 "overload cell exercises deferral/reject backpressure, "
-                 "which trades schedule optimality for replan-rate "
-                 "stability and is not batch-identical by design."),
+                 "simulate_online(driver='batch') on the same trace — "
+                 "including the gamma='pinned' cells, whose batch "
+                 "comparator pins identically; pinned cells must clear the "
+                 "pinned_hit_floor pure-mode repair hit rate (the PR-10 "
+                 "gamma-stability payoff, CI-gated); legacy cells re-run "
+                 "the pre-generalization repair gate — the hit-rate delta "
+                 "is the certification-bugfix payoff; the overload cell "
+                 "exercises deferral/reject backpressure, which trades "
+                 "schedule optimality for replan-rate stability and is not "
+                 "batch-identical by design."),
     }
     common.save_json("BENCH_serve", payload)
     for r in rows:

@@ -49,7 +49,9 @@ _NEUTRAL_FQNS = {
 
 # config attributes that bound cache capacity, not cached results
 _CACHE_PLUMBING_ATTRS = {"bna_cache_size", "order_cache_size",
-                         "edge_cache_size", "compile_cache_size"}
+                         "edge_cache_size", "compile_cache_size",
+                         "group_cache_size", "loads_cache_size",
+                         "gkey_cache_size"}
 
 _HINT_PARAM = ("fold the parameter into the cache key (or derive both key "
                "and value from the same inputs); a value-only input makes "

@@ -4,7 +4,8 @@ primal-dual job ordering, G-DM / G-DM-RT, the O(m)Alg baseline, backfilling,
 the online driver, and the paper's workload/verification machinery."""
 
 from .backend import (bna_pieces_many, cache_stats, clear_caches,
-                      compute_alphas, prefetch_bna, prefetch_plan,
+                      compute_alphas, group_block, grouping_prefix,
+                      prefetch_bna, prefetch_plan,
                       set_alpha_backend, set_bna_backend, set_plan_backend,
                       use_alpha_backend, use_bna_backend, use_plan_backend)
 from .backfill import BackfillResult, backfill
@@ -19,7 +20,7 @@ from .engine import (PlanResult, Scheduler, available_schedulers,
 from .fsp_reduction import fsp_to_coflow_job
 from .gap_instance import (gap_bounds, gap_hand_schedule, gap_instance,
                            gap_optimal_schedule_length)
-from .gdm import gdm, group_jobs
+from .gdm import GammaEpoch, gdm, geometric_bucket, group_jobs
 from .online import OnlineResult, simulate_online
 from .session import (AdmissionPolicy, Frontier, SchedulerSession,
                       SessionSnapshot, SessionStats)

@@ -41,6 +41,29 @@ variables, selects how the engine's two hot paths execute:
   same state is re-planned (algorithm A/B pairs on one instance, beta
   sweeps, and online reschedules whose surviving jobs are untouched).
 
+* **group-block cache** — a bounded LRU over spread-mode G-DM / G-DM-RT
+  *group parts*: the DMA / DMA-RT schedule of one geometric group, built
+  at origin 0 and keyed on the construction's full input (scheduler kind,
+  port count, beta/decompose/nested/require_tree knobs, and the ordered
+  member tuple with each job's DAG edges and per-coflow demand bytes).
+  Spread-mode layouts are deterministic (zero rng draws) and translation
+  invariant in the origin, so ``group_block(...).shifted_expanded(start)``
+  is bit-identical to rebuilding the group at ``start`` — this is what
+  lets full replans under a session-pinned gamma reassemble untouched
+  groups as shifted blocks instead of re-running DMA (see
+  ``core/session.py``).  Randomized delay modes are never cached (their
+  layouts consume rng draws, so a cached result would corrupt the
+  caller's stream).
+
+* **loads / grouping-key caches** — per-job Algorithm 5 load vectors
+  keyed on demand bytes (``ordering.job_load_vectors``), and the
+  geometric-grouping prefix-load cumsum keyed on the ordered demand
+  signature (:func:`grouping_keys`).  The cumsum cache is *incremental*:
+  a replan whose Algorithm 5 order extends a cached prefix (appended
+  arrivals) extends the cached cumsum with the new rows instead of
+  recomputing the whole prefix — exact, because the loads are integers
+  far below 2^53 (guarded).
+
 * **plan backend** — the whole-planning-path knob (``core/pipeline.py``):
   ``"python"`` runs the classic per-coflow loop; ``"jit"`` routes the
   per-instance prefetch, the per-coflow edge-interval construction, and the
@@ -61,6 +84,11 @@ Environment switches (read once at import; also settable in-process)::
                            (default: 1)
     REPRO_BNA_CACHE_SIZE   max cached decompositions  (default: 4096; 0 off)
     REPRO_ORDER_CACHE_SIZE max cached job orders      (default: 256;  0 off)
+    REPRO_GROUP_CACHE_SIZE max cached group blocks    (default: 512;  0 off)
+    REPRO_LOADS_CACHE_SIZE max cached per-job load
+                           vectors (Algorithm 5)      (default: 4096; 0 off)
+    REPRO_GKEY_CACHE_SIZE  max cached grouping-key
+                           prefix cumsums             (default: 512;  0 off)
 """
 from __future__ import annotations
 
@@ -94,6 +122,8 @@ __all__ = [
     "bna_pieces",
     "bna_pieces_many",
     "prefetch_bna",
+    "group_block",
+    "grouping_prefix",
     "cache_stats",
     "clear_caches",
     "no_caches",
@@ -114,6 +144,9 @@ class BackendConfig:
     bna_batch: bool = True
     bna_cache_size: int = 4096
     order_cache_size: int = 256
+    group_cache_size: int = 512
+    loads_cache_size: int = 4096
+    gkey_cache_size: int = 512
 
     @staticmethod
     def from_env() -> "BackendConfig":
@@ -124,6 +157,9 @@ class BackendConfig:
             bna_batch=os.environ.get("REPRO_BNA_BATCH", "1") != "0",
             bna_cache_size=int(os.environ.get("REPRO_BNA_CACHE_SIZE", "4096")),
             order_cache_size=int(os.environ.get("REPRO_ORDER_CACHE_SIZE", "256")),
+            group_cache_size=int(os.environ.get("REPRO_GROUP_CACHE_SIZE", "512")),
+            loads_cache_size=int(os.environ.get("REPRO_LOADS_CACHE_SIZE", "4096")),
+            gkey_cache_size=int(os.environ.get("REPRO_GKEY_CACHE_SIZE", "512")),
         )
         if cfg.alpha_backend not in _ALPHA_BACKENDS:
             raise ValueError(
@@ -396,6 +432,14 @@ class LRUCache:
         self.hits += 1
         return True, val
 
+    def peek(self, key):
+        """(found, value) WITHOUT touching counters or recency — for
+        secondary probes (the grouping-key prefix scan) whose hits/misses
+        would otherwise distort the primary lookup's rates."""
+        if self.maxsize <= 0 or key not in self._od:
+            return False, None
+        return True, self._od[key]
+
     def store(self, key, val) -> None:
         if self.maxsize <= 0:
             return
@@ -421,6 +465,9 @@ class LRUCache:
 
 bna_cache = LRUCache(config.bna_cache_size, "bna")
 order_cache = LRUCache(config.order_cache_size, "order")
+group_cache = LRUCache(config.group_cache_size, "group")
+loads_cache = LRUCache(config.loads_cache_size, "loads")
+gkey_cache = LRUCache(config.gkey_cache_size, "gkey")
 
 # per-batch counters for bna_pieces_many (surfaced in cache_stats()["bna"]
 # ["batch"]): how many batched lookups ran, and how their members split
@@ -521,19 +568,173 @@ def prefetch_bna(demands: "Iterable[np.ndarray]") -> None:
     bna_pieces_many(ds, keys=keys)
 
 
+# --------------------------------------------------------------------------
+# spread-mode group-block cache (G-DM / G-DM-RT geometric groups)
+# --------------------------------------------------------------------------
+
+def _group_sig(jobs) -> tuple:
+    """Per-job identity a spread-mode DMA/DMA-SRT layout is a function of:
+    job id (embedded in the emitted ledger/expansion), weight and release
+    (unread by the constructions but kept for soundness against future
+    changes — both are constant per job across replans, so they cost no
+    hits), DAG edges, and per-coflow (cid, shape, dtype, bytes)."""
+    return tuple(
+        (int(j.jid), float(j.weight), int(j.release), tuple(j.edges),
+         tuple((c.cid, c.demand.shape, c.demand.dtype.str,
+                c.demand.tobytes()) for c in j.coflows))
+        for j in jobs)
+
+
+def group_block(kind: str, jobs, m: int, *, beta: float = 2.0,
+                decompose: bool = False, use_kernel: "bool | None" = None,
+                nested: bool = True, require_tree: bool = True,
+                delays: str = "spread"):
+    """One geometric group's DMA (kind="gdm") / DMA-RT (kind="gdm_rt")
+    schedule built at **origin 0**, memoized on the construction's full
+    input.  Spread-mode layouts are deterministic (zero rng draws) and
+    translation invariant in the origin, so callers place the block with
+    ``.shifted_expanded(start)`` — bit-identical to rebuilding the group at
+    ``start``.  This is what turns a "full replan" under a session-pinned
+    gamma into a reassembly of already-built blocks (core/gdm.py group
+    loop, core/session.py grouped repair).
+
+    The returned FinalSchedule is shared across callers and must be
+    treated as read-only (the same contract as the shared BNA pieces; its
+    lazy decomposition fields are idempotent).  Randomized delay modes are
+    rejected: their layouts consume rng draws, so a cached result would
+    corrupt the caller's stream.
+    """
+    from .dma import dma
+    from .dma_srt import dma_rt
+
+    if kind not in ("gdm", "gdm_rt"):
+        raise ValueError(f"unknown group-block kind {kind!r}; "
+                         f"choose from ('gdm', 'gdm_rt')")
+    if delays != "spread":
+        raise ValueError(
+            f"group_block caches spread-mode layouts only (got "
+            f"delays={delays!r}): randomized modes consume rng draws")
+    group_cache.maxsize = config.group_cache_size
+    key = (kind, int(m), float(beta), bool(decompose), use_kernel,
+           bool(nested), bool(require_tree), delays) + _group_sig(jobs)
+    found, part = group_cache.lookup(key)
+    if not found:
+        if kind == "gdm_rt":
+            part = dma_rt(list(jobs), m, beta=beta, rng=None, origin=0,
+                          decompose=decompose, use_kernel=use_kernel,
+                          nested=nested, require_tree=require_tree,
+                          delays=delays)
+        else:
+            part = dma(list(jobs), m, beta=beta, rng=None, origin=0,
+                       decompose=decompose, use_kernel=use_kernel,
+                       delays=delays)
+        group_cache.store(key, part)
+    return part
+
+
+# --------------------------------------------------------------------------
+# incremental Algorithm 5 grouping-key prefix (geometric grouping, step 2)
+# --------------------------------------------------------------------------
+
+# how far back the prefix probe scans: appended-arrival replans extend the
+# previous event's entry, and arrival batches are small, so a handful of
+# probe lengths covers the streaming case without scanning the cache
+_GKEY_PREFIX_PROBES = 4
+
+# exact hits / prefix extensions / cold recomputes (cache_stats()["gkey"])
+_gkey_counts = {"exact": 0, "extended": 0, "cold": 0}
+
+
+def _gkey_sig(job) -> tuple:
+    """What a job contributes to the prefix-load cumsum: its per-coflow
+    demands (the load vector is their row/column sums)."""
+    return tuple((c.demand.shape, c.demand.dtype.str, c.demand.tobytes())
+                 for c in job.coflows)
+
+
+def grouping_prefix(instance, order: list) -> np.ndarray:
+    """D_i for the geometric grouping (paper §VI step 2): the effective
+    size of the aggregate coflow of the first i jobs of ``order`` — the
+    max over 2m ports of the prefix cumsum of per-job load vectors (row
+    sums commute with prefix sums, so no (m, m) accumulation is needed;
+    both the old fast path and the old dense fallback now share this one
+    O(n·m) computation).
+
+    Memoized on (m, ordered per-job demand signature) with **incremental
+    prefix extension**: when the exact key misses but a recent prefix of
+    the order is cached — the appended-arrivals replan shape — only the
+    new rows are cumsum-extended from the cached last row.  Exact in
+    float64 below 2^53 (guarded).  Returns an int64 array aligned with
+    ``order``.
+    """
+    from .ordering import job_load_vectors
+
+    gkey_cache.maxsize = config.gkey_cache_size
+    if not order:
+        return np.zeros(0, dtype=np.int64)
+    by_id = {j.jid: j for j in instance.jobs}
+    m = instance.m
+    sigs = tuple(_gkey_sig(by_id[jid]) for jid in order)
+    key = (m,) + sigs
+    found, val = gkey_cache.lookup(key)
+    if found:
+        _gkey_counts["exact"] += 1
+        return val[1]
+    n = len(order)
+    base_row, base_D, start = None, None, 0
+    for p in range(n - 1, max(n - 1 - _GKEY_PREFIX_PROBES, 0), -1):
+        hit, pv = gkey_cache.peek((m,) + sigs[:p])
+        if hit:
+            base_row, base_D, start = pv[0], pv[1], p
+            break
+    _gkey_counts["extended" if base_row is not None else "cold"] += 1
+    rows = job_load_vectors([by_id[jid] for jid in order[start:]], m)
+    cum = np.cumsum(rows, axis=0)
+    if base_row is not None:
+        cum += base_row
+    if cum.size and float(cum[-1].max()) >= 2.0**53:
+        # past 2^53 float64 drops integer precision and the prefix maxima
+        # would silently stop being the exact effective sizes
+        raise ValueError(
+            "prefix load cumsum exceeds the float64 integer-exact "
+            "range (2^53); the geometric grouping keys would be inexact")
+    D_new = cum.max(axis=1).astype(np.int64)
+    D = D_new if base_D is None else np.concatenate([base_D, D_new])
+    last_row = cum[-1].copy() if cum.size else \
+        (base_row if base_row is not None else np.zeros(2 * m))
+    gkey_cache.store(key, (last_row, D))
+    return D
+
+
 def cache_stats() -> dict:
     stats = {"bna": {**bna_cache.stats(), "batch": dict(_bna_batch)},
-             "order": order_cache.stats()}
+             "order": order_cache.stats(),
+             "group": group_cache.stats(),
+             "loads": loads_cache.stats(),
+             "gkey": {**gkey_cache.stats(), "prefix": dict(_gkey_counts)}}
     if "repro.core.pipeline" in sys.modules:
         stats["plan"] = sys.modules["repro.core.pipeline"].pipeline_stats()
     return stats
 
 
+def _result_caches() -> "list[tuple[str, LRUCache]]":
+    """(config size attr, cache) for every result memo this module owns —
+    the single list clear_caches/no_caches iterate, so a new cache cannot
+    be forgotten by one of them."""
+    return [("bna_cache_size", bna_cache),
+            ("order_cache_size", order_cache),
+            ("group_cache_size", group_cache),
+            ("loads_cache_size", loads_cache),
+            ("gkey_cache_size", gkey_cache)]
+
+
 def clear_caches() -> None:
-    bna_cache.clear()
-    order_cache.clear()
+    for _, cache in _result_caches():
+        cache.clear()
     for k in _bna_batch:
         _bna_batch[k] = 0
+    for k in _gkey_counts:
+        _gkey_counts[k] = 0
     if "repro.core.pipeline" in sys.modules:
         # result caches only; compiled executables are data-independent
         sys.modules["repro.core.pipeline"].clear_pipeline_caches()
@@ -544,37 +745,24 @@ def no_caches():
     """Disable (and clear) the result caches — the from-scratch comparator.
     Covers the jit pipeline's edge cache too (compiled executables stay:
     they are data-independent, caching them is not a result memo)."""
-    prev = (config.bna_cache_size, config.order_cache_size)
-    saved_bna = (bna_cache.maxsize, dict(bna_cache._od),
-                 bna_cache.hits, bna_cache.misses)
-    saved_ord = (order_cache.maxsize, dict(order_cache._od),
-                 order_cache.hits, order_cache.misses)
+    pairs = _result_caches()
     edge_cache = None
     if "repro.core.pipeline" in sys.modules:
         edge_cache = sys.modules["repro.core.pipeline"].edge_cache
-    saved_edge = None
-    if edge_cache is not None:
-        saved_edge = (edge_cache.maxsize, dict(edge_cache._od),
-                      edge_cache.hits, edge_cache.misses)
-        edge_cache.clear()
-        edge_cache.maxsize = 0
-    config.bna_cache_size = 0
-    config.order_cache_size = 0
-    bna_cache.clear()
-    order_cache.clear()
-    bna_cache.maxsize = 0
-    order_cache.maxsize = 0
+    saved_cfg = {attr: getattr(config, attr) for attr, _ in pairs}
+    caches = [c for _, c in pairs] + ([edge_cache] if edge_cache else [])
+    saved = [(c.maxsize, dict(c._od), c.hits, c.misses) for c in caches]
+    for attr, _ in pairs:
+        setattr(config, attr, 0)
+    for c in caches:
+        c.clear()
+        c.maxsize = 0
     try:
         yield
     finally:
-        config.bna_cache_size, config.order_cache_size = prev
-        bna_cache.maxsize = saved_bna[0]
-        bna_cache._od = OrderedDict(saved_bna[1])
-        bna_cache.hits, bna_cache.misses = saved_bna[2], saved_bna[3]
-        order_cache.maxsize = saved_ord[0]
-        order_cache._od = OrderedDict(saved_ord[1])
-        order_cache.hits, order_cache.misses = saved_ord[2], saved_ord[3]
-        if edge_cache is not None:
-            edge_cache.maxsize = saved_edge[0]
-            edge_cache._od = OrderedDict(saved_edge[1])
-            edge_cache.hits, edge_cache.misses = saved_edge[2], saved_edge[3]
+        for attr, _ in pairs:
+            setattr(config, attr, saved_cfg[attr])
+        for c, (maxsize, od, hits, misses) in zip(caches, saved):
+            c.maxsize = maxsize
+            c._od = OrderedDict(od)
+            c.hits, c.misses = hits, misses

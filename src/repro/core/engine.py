@@ -210,16 +210,29 @@ class _Registered:
     name: str
     opts: dict = field(default_factory=dict)
 
-    def plan_full(self, instance: Instance) -> PlanResult:
+    def plan_full(self, instance: Instance, **overrides) -> PlanResult:
         # instance-level plan prefetch: one batched decomposition call
         # (jit pipeline or bna_pieces_many, per REPRO_PLAN_BACKEND) warms
         # the caches for every coflow BEFORE the factory's
         # isolated_job_unit / dma_srt walk jobs one at a time (no-op when
-        # batching or the cache is off; results-identical either way)
+        # batching or the cache is off; results-identical either way).
+        # `overrides` are per-plan option overrides validated against the
+        # registry exactly like make_scheduler's — the session threads its
+        # pinned gamma through here, one value per planning event.
+        opts = self.opts
+        if overrides:
+            unknown = sorted(set(overrides)
+                             - set(_REGISTRY[self.name].options))
+            if unknown:
+                raise TypeError(
+                    f"unknown plan override(s) {unknown} for scheduler "
+                    f"{self.name!r}; valid options: "
+                    f"{sorted(_REGISTRY[self.name].options)}")
+            opts = {**self.opts, **overrides}
         backend.prefetch_plan(c.demand for j in instance.jobs
                               for c in j.coflows)
         return PlanResult(self.name,
-                          _REGISTRY[self.name].factory(instance, **self.opts))
+                          _REGISTRY[self.name].factory(instance, **opts))
 
     def plan(self, instance: Instance) -> Transcript:
         return self.plan_full(instance).transcript()
@@ -259,7 +272,7 @@ def _rng(opts_rng, seed):
     return np.random.default_rng(seed) if opts_rng is None else opts_rng
 
 
-_GDM_OPTS = ("beta", "seed", "rng", "nested", "decompose", "delays")
+_GDM_OPTS = ("beta", "seed", "rng", "nested", "decompose", "delays", "gamma")
 _GDM_RT_OPTS = _GDM_OPTS + ("require_tree",)
 _OM_ALG_OPTS = ("decompose", "seed")
 
@@ -270,9 +283,10 @@ _OM_ALG_OPTS = ("decompose", "seed")
                     options=_GDM_OPTS)
 def _gdm(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
          nested: bool = True, decompose: bool = False,
-         delays: str = "random") -> CompositeSchedule:
+         delays: str = "random", gamma=None) -> CompositeSchedule:
     return gdm(instance, beta=beta, rng=_rng(rng, seed), rooted=False,
-               decompose=decompose, nested=nested, delays=delays)
+               decompose=decompose, nested=nested, delays=delays,
+               gamma=gamma)
 
 
 @register_scheduler("gdm_rt", "G-DM-RT (Algorithm 4 over rooted trees, "
@@ -282,10 +296,10 @@ def _gdm(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
 def _gdm_rt(instance: Instance, *, beta: float = 2.0, seed: int = 0, rng=None,
             nested: bool = True, decompose: bool = False,
             require_tree: bool = True,
-            delays: str = "random") -> CompositeSchedule:
+            delays: str = "random", gamma=None) -> CompositeSchedule:
     return gdm(instance, beta=beta, rng=_rng(rng, seed), rooted=True,
                decompose=decompose, nested=nested, require_tree=require_tree,
-               delays=delays)
+               delays=delays, gamma=gamma)
 
 
 @register_scheduler("om_alg", "O(m)Alg baseline: one-at-a-time jobs in "
@@ -328,7 +342,7 @@ def _om_alg_bf(instance: Instance, *, exec: str = "packet",
 
 def plan_online(instance: Instance, scheduler: "str | Scheduler",
                 incremental: bool = True, driver: str = "session",
-                repair: bool = True, **opts):
+                repair: bool = True, gamma="residual", **opts):
     """Run the §VII-C.2 online protocol with a registered scheduler — a
     thin, results-identical driver over a :class:`SchedulerSession`
     (``driver="batch"`` selects the historical closed batch loop, the
@@ -356,14 +370,14 @@ def plan_online(instance: Instance, scheduler: "str | Scheduler",
         before = backend.cache_stats()
         t0 = time.perf_counter()
         res = simulate_online(instance, scheduler, driver=driver,
-                              repair=repair)
+                              repair=repair, gamma=gamma)
         wall = time.perf_counter() - t0
         after = backend.cache_stats()
         stats: dict = {"wall_s": wall, "reschedules": res.reschedules,
                        "incremental": incremental, "driver": driver}
         if "session" in res.stats:
             stats["session"] = res.stats["session"]
-        for cache in ("bna", "order"):
+        for cache in ("bna", "order", "group"):
             hits = after[cache]["hits"] - before[cache]["hits"]
             misses = after[cache]["misses"] - before[cache]["misses"]
             total = hits + misses

@@ -69,7 +69,8 @@ def _resolve_scheduler(scheduler, opts: dict | None = None) -> SchedulerFn:
 
 
 def simulate_online(instance: Instance, scheduler, driver: str = "session",
-                    repair: bool = True, **opts) -> OnlineResult:
+                    repair: bool = True, gamma="residual",
+                    **opts) -> OnlineResult:
     """Run the rescheduling protocol.  `scheduler` may be a callable, an
     engine Scheduler, or a registered name; with a name, **opts are bound
     through the registry (e.g. ``simulate_online(inst, "gdm_bf",
@@ -77,13 +78,20 @@ def simulate_online(instance: Instance, scheduler, driver: str = "session",
 
     driver="session" (default) drives a SchedulerSession (frontier-append
     plan repair enabled unless ``repair=False``); driver="batch" runs the
-    historical closed batch loop — the results-identical reference."""
+    historical closed batch loop — the results-identical reference.
+
+    ``gamma`` is the grouping-scale policy ('residual' | 'pinned' |
+    positive number — see core/session.py); both drivers implement the
+    identical pinned-gamma epoch, so the bit-identity contract holds
+    under pinning too."""
     if driver not in ("session", "batch"):
         raise ValueError(f"unknown driver {driver!r}; "
                          f"choose from ('session', 'batch')")
     if driver == "batch":
-        return _simulate_online_batch(instance, scheduler, **opts)
-    session = SchedulerSession(instance.m, scheduler, repair=repair, **opts)
+        return _simulate_online_batch(instance, scheduler, gamma=gamma,
+                                      **opts)
+    session = SchedulerSession(instance.m, scheduler, repair=repair,
+                               gamma=gamma, **opts)
     for j in sorted(instance.jobs, key=lambda j: (j.release, j.jid)):
         session.submit(j)
     session.advance()
@@ -92,9 +100,44 @@ def simulate_online(instance: Instance, scheduler, driver: str = "session",
     return res
 
 
-def _simulate_online_batch(instance: Instance, scheduler, **opts) -> OnlineResult:
-    """The historical closed batch loop (reference comparator)."""
-    scheduler = _resolve_scheduler(scheduler, opts)
+def _simulate_online_batch(instance: Instance, scheduler, gamma="residual",
+                           **opts) -> OnlineResult:
+    """The historical closed batch loop (reference comparator).
+
+    Mirrors the session's pinned-gamma epoch exactly: the pin is a pure
+    function of the residual-instance sequence (one ``observe`` per
+    replan), so session and batch plan every residual with the same
+    gamma — the bit-identity contract survives pinning."""
+    from .gdm import GammaEpoch
+
+    epoch = GammaEpoch.from_policy(gamma)
+    if epoch is None:
+        scheduler = _resolve_scheduler(scheduler, opts)
+    else:
+        from .engine import make_scheduler, scheduler_options
+
+        name = scheduler if isinstance(scheduler, str) \
+            else getattr(scheduler, "name", None)
+        try:
+            gamma_ok = isinstance(name, str) and \
+                "gamma" in scheduler_options(name)
+        except KeyError:
+            gamma_ok = False
+        if not gamma_ok:
+            raise ValueError(
+                f"gamma={gamma!r} needs an engine scheduler taking the "
+                f"'gamma' plan option (the G-DM family); got {name!r}")
+        if isinstance(scheduler, str):
+            sched_obj = make_scheduler(scheduler, **opts)
+        elif opts:
+            raise TypeError("scheduler options are only accepted with a "
+                            "scheduler name, not a prebuilt scheduler")
+        else:
+            sched_obj = scheduler
+
+        def scheduler(sub):
+            return sched_obj.plan_full(
+                sub, gamma=epoch.observe(sub.gamma())).transcript()
     jobs = sorted(instance.jobs, key=lambda j: (j.release, j.jid))
     remaining: dict[tuple[int, int], np.ndarray] = {
         (j.jid, c.cid): c.demand.astype(np.int64).copy()

@@ -31,13 +31,28 @@ class OrderResult:
 
 
 def job_load_vectors(jobs: list[Job], m: int) -> np.ndarray:
-    """d_i^j for i in M_S + M_R: (n, 2m) aggregate-coflow loads per job."""
+    """d_i^j for i in M_S + M_R: (n, 2m) aggregate-coflow loads per job.
+
+    Each job's row is memoized on (m, per-coflow demand bytes) in the
+    backend's bounded loads LRU — untouched jobs hit across online
+    replans even though ``sub_instance`` rebuilds fresh Job objects every
+    arrival (the BNA cache's key discipline).  Rows are assembled into a
+    fresh array, so callers may mutate the result."""
+    from . import backend
+
+    backend.loads_cache.maxsize = backend.config.loads_cache_size
     n = len(jobs)
     d = np.zeros((n, 2 * m), dtype=np.float64)
     for k, j in enumerate(jobs):
-        agg = j.aggregate_demand()
-        d[k, :m] = agg.sum(axis=1)
-        d[k, m:] = agg.sum(axis=0)
+        key = (m, tuple((c.demand.shape, c.demand.dtype.str,
+                         c.demand.tobytes()) for c in j.coflows))
+        found, row = backend.loads_cache.lookup(key)
+        if not found:
+            agg = j.aggregate_demand()
+            row = np.concatenate([agg.sum(axis=1), agg.sum(axis=0)]) \
+                .astype(np.float64)
+            backend.loads_cache.store(key, row)
+        d[k] = row
     return d
 
 

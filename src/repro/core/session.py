@@ -49,25 +49,50 @@ jobs and residual demands, and it is translation invariant —
 ``dma(jobs, origin=o)`` is ``dma(jobs, origin=0)`` slid by ``o``.  The
 repair therefore re-derives the Algorithm 5 order and geometric grouping
 of the residual instance and walks the replan's group chain: a retained
-group whose membership matches an old group verbatim, whose residuals are
-bit-equal to the plan-time snapshot, and whose old expansion part sits
-exactly at the chain position a replan would assign (``origin == tau +
-cursor``) is **reused as one block** (``FinalSchedule.shifted_expanded``)
-— including non-singleton and expanded (alpha > 1) groups, which the
-previous singleton-only check always rejected; every other group (the
-in-flight group an arrival interrupted, groups whose membership changed,
-groups holding new jobs) is recomputed with the exact ``gdm()``
-construction for that scheduler — ``dma`` for G-DM, ``dma_rt`` (including
-its forest/start-after-parents fallback) for G-DM-RT.  The result is
-bit-identical to the full replan by construction; the repair is counted
-as a hit when at least one block was reused, and per-group reuse counts
-land in ``SessionStats.groups_reused`` / ``groups_replanned``.  Randomized
+group whose membership matches an old group verbatim and whose residuals
+are bit-equal to the plan-time snapshot is **reused as one block**, slid
+from its old chain position to the one the replan would assign
+(``FinalSchedule.shifted_expanded`` — sound at *any* integer offset by
+translation invariance, not just the aligned ``origin == tau + cursor``
+position the pre-PR-10 gate demanded) — including non-singleton and
+expanded (alpha > 1) groups; every other group (the in-flight group an
+arrival interrupted, groups whose membership changed, groups holding new
+jobs) is rebuilt through the backend's **group-block cache**
+(``backend.group_block``): the exact spread-mode ``dma``/``dma_rt``
+construction — including DMA-SRT's forest/start-after-parents fallback —
+built once at origin 0 and slid into place.  The result is bit-identical
+to the full replan by construction; the repair is counted as a hit when
+at least one block was reused, and per-group reuse counts land in
+``SessionStats.groups_reused`` / ``groups_replanned``.  Randomized
 G-DM/G-DM-RT always fall back (their delays re-draw per plan).
 Repair/replan counts, the repair hit rate, and warm-replan wall-clock are
 reported in :class:`SessionStats` alongside the engine's BNA/order cache
 stats.  ``repair="legacy"`` keeps the pre-generalization gate (om_alg +
-singleton spread-mode G-DM, whole plan untouched) for before/after
-hit-rate comparisons — ``benchmarks/serve_stream.py`` reports the delta.
+singleton spread-mode G-DM, whole plan retained at its aligned position)
+for before/after hit-rate comparisons — ``benchmarks/serve_stream.py``
+reports the delta.
+
+Pinned gamma (``gamma="pinned"``)
+---------------------------------
+Even with the grouped certification, the repair fires rarely in pure mode
+because the *geometric grouping itself* drifts: the paper's gamma is the
+residual instance's min positive flow size, which changes on nearly every
+arrival and re-buckets every retained job.  ``gamma="pinned"`` hands
+ownership of gamma to the session: a :class:`~repro.core.gdm.GammaEpoch`
+pins the first residual's natural gamma and thereafter rescales
+monotonically downward by powers of two only when a later residual's
+natural gamma drops below the pin (counted in
+``SessionStats.gamma_rescales``; the grouping analysis holds up to the
+pin's bounded ratio — see core/gdm.py).  The pin is observed once per
+planning event from the residual instance — a pure function of the
+residual sequence, replicated verbatim by ``simulate_online``'s batch
+driver, so stream-vs-batch bit-identity is preserved — and threaded to
+both the repair's ``group_jobs`` call and the full replan
+(``plan_full(sub, gamma=...)``).  ``gamma=<positive int/Fraction>`` pins
+a fixed value instead; ``gamma="residual"`` (default) keeps the paper's
+per-residual gamma.  Pinning requires an engine scheduler whose factory
+takes the ``gamma`` plan option (the G-DM family); the epoch state rides
+along in :class:`SessionSnapshot` so kill-and-resume keeps the pin.
 
 Backpressure (sustained arrivals)
 ---------------------------------
@@ -243,6 +268,8 @@ class SessionStats:
     but failed a soundness check (and fell back — they are counted inside
     ``full_replans`` too).  The grouped repair path (spread-mode G-DM /
     G-DM-RT) additionally counts reused vs recomputed geometric groups;
+    ``gamma_rescales`` is the pinned-gamma epoch's cumulative power-of-two
+    downscale count (0 under ``gamma="residual"``);
     ``replan_debt`` is the windowed full-replan fraction the
     :class:`AdmissionPolicy` compares against its budget, and
     ``admission_deferred`` / ``admission_rejects`` count arrivals the
@@ -254,6 +281,7 @@ class SessionStats:
     repair_rejects: int = 0
     groups_reused: int = 0
     groups_replanned: int = 0
+    gamma_rescales: int = 0
     admission_deferred: int = 0
     admission_rejects: int = 0
     replan_debt: float = 0.0
@@ -279,6 +307,7 @@ class SessionStats:
             "repair_hit_rate": self.repair_hit_rate,
             "groups_reused": self.groups_reused,
             "groups_replanned": self.groups_replanned,
+            "gamma_rescales": self.gamma_rescales,
             "admission_deferred": self.admission_deferred,
             "admission_rejects": self.admission_rejects,
             "replan_debt": self.replan_debt,
@@ -332,6 +361,7 @@ class SessionSnapshot:
     remaining: dict[tuple[int, int], np.ndarray]
     done: dict[tuple[int, int], float]
     reschedules: int
+    gamma_epoch: tuple | None = None   # GammaEpoch.state(), for pinned gamma
 
     def remaining_total(self) -> int:
         return int(sum(int(r.sum()) for r in self.remaining.values()))
@@ -369,8 +399,10 @@ class SchedulerSession:
     coflow scheduling (see module docstring)."""
 
     def __init__(self, m: int, scheduler="gdm", *, repair: "bool | str" = True,
-                 admission: AdmissionPolicy | None = None, **opts):
+                 admission: AdmissionPolicy | None = None,
+                 gamma: "str | int | object" = "residual", **opts):
         from . import backend
+        from .gdm import GammaEpoch
 
         self.m = int(m)
         if repair not in (True, False, "legacy"):
@@ -378,6 +410,7 @@ class SchedulerSession:
                              f"got {repair!r}")
         self.repair = repair
         self.admission = admission
+        self._gamma_epoch = GammaEpoch.from_policy(gamma)
         window = admission.window if admission is not None else 32
         self._recent_outcomes: list[int] = []   # 1 = full replan, 0 = repair
         self._recent_window = window
@@ -391,6 +424,19 @@ class SchedulerSession:
             raise TypeError("scheduler options are only accepted with a "
                             "scheduler name, not a prebuilt scheduler")
         self._scheduler = scheduler
+        if self._gamma_epoch is not None:
+            from .engine import scheduler_options
+
+            try:
+                gamma_ok = isinstance(self._scheduler_name, str) and \
+                    "gamma" in scheduler_options(self._scheduler_name)
+            except KeyError:
+                gamma_ok = False
+            if not gamma_ok:
+                raise ValueError(
+                    f"gamma={gamma!r} needs an engine scheduler taking the "
+                    f"'gamma' plan option (the G-DM family); "
+                    f"got {self._scheduler_name!r}")
         self._jobs: list[Job] = []                     # submission order
         self._by_jid: dict[int, Job] = {}
         self._pending: list[tuple[float, int, Job]] = []   # (release, jid, job)
@@ -410,6 +456,7 @@ class SchedulerSession:
     def restore(cls, snapshot: SessionSnapshot, jobs: list[Job], scheduler="gdm",
                 *, repair: "bool | str" = True,
                 admission: AdmissionPolicy | None = None,
+                gamma: "str | int | object" = "residual",
                 **opts) -> "SchedulerSession":
         """Rebuild a session from a :meth:`snapshot` plus the submitted Job
         objects — the kill-and-resume path.  The restored session holds the
@@ -419,9 +466,18 @@ class SchedulerSession:
         certification already guarantees is results-identical — so a stream
         resumed from a snapshot taken at an arrival event continues
         bit-identically (tests/test_stream.py proves it across the online
-        matrix).  Stats counters restart from zero."""
+        matrix).  Stats counters restart from zero — except the gamma
+        epoch, which resumes from ``snapshot.gamma_epoch`` (pin AND
+        cumulative rescale count) when the restored session also pins, so
+        the grouping scale continues exactly where the killed session left
+        it."""
         s = cls(snapshot.m, scheduler, repair=repair, admission=admission,
-                **opts)
+                gamma=gamma, **opts)
+        if s._gamma_epoch is not None and not s._gamma_epoch.fixed \
+                and snapshot.gamma_epoch is not None:
+            from .gdm import GammaEpoch
+
+            s._gamma_epoch = GammaEpoch.from_state(snapshot.gamma_epoch)
         by_jid = {j.jid: j for j in jobs}
         missing = [jid for jid in snapshot.submitted if jid not in by_jid]
         if missing:
@@ -575,6 +631,8 @@ class SchedulerSession:
             remaining={k: v.copy() for k, v in self._remaining.items()},
             done=dict(self._done),
             reschedules=self.stats.reschedules,
+            gamma_epoch=self._gamma_epoch.state()
+            if self._gamma_epoch is not None else None,
         )
 
     def result(self):
@@ -593,7 +651,7 @@ class SchedulerSession:
             job_comp[j.jid] = max(cs, default=float(j.release))
         stats: dict = {"session": self.stats.as_dict()}
         after = backend.cache_stats()
-        for cache in ("bna", "order"):
+        for cache in ("bna", "order", "group"):
             hits = after[cache]["hits"] - self._cache_before[cache]["hits"]
             misses = after[cache]["misses"] - self._cache_before[cache]["misses"]
             total = hits + misses
@@ -665,15 +723,19 @@ class SchedulerSession:
             self._dirty = False
             self._arrived_since_plan = []
             return
+        pinned = None
+        if self._gamma_epoch is not None:
+            pinned = self._gamma_epoch.observe(sub.gamma())
+            self.stats.gamma_rescales = self._gamma_epoch.rescales
         t0 = time.perf_counter()
-        epoch = self._try_repair(sub, cid_maps)
+        epoch = self._try_repair(sub, cid_maps, pinned)
         repaired = epoch is not None
         if repaired:
             wall = time.perf_counter() - t0
             self.stats.repairs += 1
             self.stats.repair_wall_s += wall
         else:
-            plan, transcript = self._plan(sub)
+            plan, transcript = self._plan(sub, pinned)
             wall = time.perf_counter() - t0
             epoch = self._make_epoch(transcript, plan, cid_maps, sub)
             self.stats.full_replans += 1
@@ -703,11 +765,14 @@ class SchedulerSession:
                          transcript.job_completions().items()},
         )
 
-    def _plan(self, sub: Instance):
+    def _plan(self, sub: Instance, pinned=None):
         s = self._scheduler
         plan_full = getattr(s, "plan_full", None)
         if callable(plan_full):
-            p = plan_full(sub)   # engine path: plan_full prefetches itself
+            # engine path: plan_full prefetches itself; a pinned gamma
+            # overrides the grouping scale for this event only
+            p = plan_full(sub, gamma=pinned) if pinned is not None \
+                else plan_full(sub)
             self._last_plan = p
             return p, p.transcript()
         # plain callables get NO speculative prefetch: the session cannot
@@ -752,7 +817,8 @@ class SchedulerSession:
 
     # --- frontier-append plan repair ---------------------------------------
 
-    def _try_repair(self, sub: Instance, cid_maps: dict[int, list[int]]):
+    def _try_repair(self, sub: Instance, cid_maps: dict[int, list[int]],
+                    pinned=None):
         """Splice the newly-arrived jobs past the retained plan's frontier,
         when provably identical to a full replan (module docstring).
         Returns the repaired _Epoch, or None to fall back."""
@@ -790,7 +856,7 @@ class SchedulerSession:
 
         if grouped:
             return self._repair_grouped(sub, cid_maps, parts, new_jids, ep,
-                                        name, opts, reject)
+                                        name, opts, reject, pinned)
 
         # (1) every unfinished retained coflow untouched since the plan
         for key in old_keys:
@@ -874,16 +940,18 @@ class SchedulerSession:
 
     def _repair_grouped(self, sub: Instance, cid_maps: dict[int, list[int]],
                         parts, new_jids: set, ep: _Epoch, name: str,
-                        opts: dict, reject):
+                        opts: dict, reject, pinned=None):
         """Group-aware repair for spread-mode G-DM / G-DM-RT (module
         docstring): re-derive the Algorithm 5 order and geometric grouping
-        of the residual instance, then walk the replan's group chain —
-        reusing each retained group part whose inputs and chain position
-        are untouched as one shifted block, and recomputing the rest with
-        the exact ``gdm()`` construction.  Bit-identical to the full replan
-        by construction: spread-mode DMA/DMA-SRT layouts are deterministic
-        functions of (group jobs, residual demands, origin), and
-        translation invariant in the origin."""
+        of the residual instance (under the session's pinned gamma when
+        one is active — the same value the full replan would use), then
+        walk the replan's group chain — sliding each retained group part
+        whose inputs are untouched to its new chain position as one block,
+        and rebuilding the rest through the backend's group-block cache.
+        Bit-identical to the full replan by construction: spread-mode
+        DMA/DMA-SRT layouts are deterministic functions of (group jobs,
+        residual demands, origin), and translation invariant in the
+        origin — so a block built at any origin is exact at any other."""
         from .engine import PlanResult
         from .gdm import group_jobs
         from .ordering import cached_job_order
@@ -891,13 +959,13 @@ class SchedulerSession:
         old_groups = ep.plan.schedule.meta.get("groups")
         if old_groups is None or len(old_groups) != len(parts):
             return reject()
+        legacy = self.repair == "legacy"
         tau = self._t - ep.t0
         itau = int(round(tau))
-        if abs(tau - itau) > 1e-6:
-            return reject()   # reuse needs the integer packet clock
+        if legacy and abs(tau - itau) > 1e-6:
+            return reject()   # legacy's aligned reuse needs the packet clock
         order = cached_job_order(sub).order
-        groups = group_jobs(sub, order)
-        legacy = self.repair == "legacy"
+        groups = group_jobs(sub, order, gamma=pinned)
         if legacy and any(len(g) != 1 for g in groups):
             return reject()
         old_idx = {tuple(g): i for i, g in enumerate(old_groups)}
@@ -932,36 +1000,29 @@ class SchedulerSession:
             c.demand for g, p in zip(groups, static) if p is None
             for jid in g for c in by_jid[jid].coflows)
 
-        from .dma import dma
-        from .dma_srt import dma_rt
-
         beta = float(opts.get("beta", 2.0))
         decompose = bool(opts.get("decompose", False))
         nested = bool(opts.get("nested", True))
         require_tree = bool(opts.get("require_tree", True))
-        rng = np.random.default_rng(0)   # spread mode consumes no draws
 
         new_parts = []
         reused = 0
         cursor = 0
         for g, old_part in zip(groups, static):
             # gdm(): start = max(t_cur, releases) — sub releases are all 0
-            if old_part is not None and old_part.origin == itau + cursor:
-                # the replan would rebuild this group, from the same inputs,
-                # at exactly the old part's position: slide the whole block
-                part = old_part.shifted_expanded(-itau)
+            if old_part is not None and \
+                    (not legacy or old_part.origin == itau + cursor):
+                # the replan would rebuild this group from the same inputs:
+                # slide the whole retained block to its new chain position
+                # (legacy only reuses at the exact aligned position)
+                part = old_part.shifted_expanded(cursor - int(old_part.origin))
                 reused += 1
             else:
                 jobs_g = [by_jid[jid] for jid in g]
-                if name == "gdm_rt":
-                    part = dma_rt(jobs_g, self.m, beta=beta, rng=rng,
-                                  origin=cursor, decompose=decompose,
-                                  nested=nested, require_tree=require_tree,
-                                  delays="spread")
-                else:
-                    part = dma(jobs_g, self.m, beta=beta, rng=rng,
-                               origin=cursor, decompose=decompose,
-                               delays="spread")
+                part = backend.group_block(
+                    name, jobs_g, self.m, beta=beta, decompose=decompose,
+                    nested=nested, require_tree=require_tree,
+                    delays="spread").shifted_expanded(cursor)
             new_parts.append(part)
             cursor = int(math.ceil(part.makespan))
         if reused == 0:

@@ -237,9 +237,11 @@ class StreamDriver:
 
     def __init__(self, m: int, scheduler="gdm", *,
                  repair: "bool | str" = True,
-                 admission: AdmissionPolicy | None = None, **opts):
+                 admission: AdmissionPolicy | None = None,
+                 gamma: "str | int | object" = "residual", **opts):
         self.session = SchedulerSession(m, scheduler, repair=repair,
-                                        admission=admission, **opts)
+                                        admission=admission, gamma=gamma,
+                                        **opts)
         self.admission = admission
         self._deferred: list[tuple[float, int, Job]] = []   # (due, jid, job)
         self._latencies: list[float] = []
@@ -334,12 +336,16 @@ class StreamDriver:
 def run_stream(jobs: list[Job], m: int, scheduler="gdm", *,
                repair: "bool | str" = True,
                admission: AdmissionPolicy | None = None,
+               gamma: "str | int | object" = "residual",
                **opts) -> StreamResult:
     """Feed `jobs` (sorted by release) through a fresh StreamDriver and
     drain it.  Without `admission` the completions/twct are bit-identical
-    to ``simulate_online(Instance(m, jobs), scheduler, driver="batch")``."""
+    to ``simulate_online(Instance(m, jobs), scheduler, driver="batch")``
+    — including under a pinned grouping scale (``gamma="pinned"``, see
+    core/session.py), which both drivers derive identically from the
+    residual sequence."""
     drv = StreamDriver(m, scheduler, repair=repair, admission=admission,
-                       **opts)
+                       gamma=gamma, **opts)
     for j in sorted(jobs, key=lambda j: (j.release, j.jid)):
         drv.feed(j)
     drv.drain()

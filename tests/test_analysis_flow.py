@@ -83,6 +83,18 @@ def test_cache_key_negative(fixture_report):
                 if "cached_sound" in f.message]
 
 
+def test_cache_key_grouping_gamma_positive(fixture_report):
+    """The PR-10 bug class: a grouping cache keyed on membership only
+    serves groups computed under a stale (since-rescaled) gamma."""
+    msgs = [f.message for f in _by_rule(fixture_report, "cache-key")]
+    assert any("cached_groups()" in m and "'gamma'" in m for m in msgs)
+
+
+def test_cache_key_grouping_gamma_negative(fixture_report):
+    assert not [f for f in _by_rule(fixture_report, "cache-key")
+                if "cached_groups_sound" in f.message]
+
+
 def test_positives_invisible_to_syntactic_rules():
     """The corpus' whole point: every dataflow positive passes PR-8."""
     rep = scan_paths([FIXTURES / "src"], root=FIXTURES,

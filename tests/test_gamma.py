@@ -1,0 +1,250 @@
+"""Gamma-stable incremental replanning (PR 10): the GammaEpoch pinning
+policy, the exact integer geometric bucketing, the backend's group-block /
+grouping-prefix caches, and the relaxed any-offset block-reuse gate.
+
+Pins: geometric_bucket against a float-log reference; pinned-vs-residual
+grouping bit-identity when gamma is unchanged; 9x6-matrix feasibility and
+backfill-no-worse under pinned gamma; group-block-cache on/off schedule
+identity; pinned stream == batch bit-identity; the sustained-arrivals
+pure-mode hit-rate floor with rescale accounting; and pinned
+snapshot/restore continuation.
+"""
+import math
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import (GammaEpoch, Instance, SchedulerSession, backfill,
+                        gdm, geometric_bucket, group_jobs, run_stream,
+                        simulate_online, stream_jobs, verify_schedule)
+from repro.core import backend
+from repro.core.ordering import cached_job_order
+from repro.core.stream import StreamDriver
+
+from test_algorithms import rand_instance
+
+M = 8
+
+
+def _trace(n=40, seed=7, process="poisson", load=1.1):
+    return stream_jobs(M, n, seed, process=process, load=load, mu=2)
+
+
+# --- exact integer bucketing ------------------------------------------------
+
+def test_geometric_bucket_matches_float_reference():
+    """b = smallest b >= 0 with key <= gamma * 2^b — the old float-log
+    computation (plus its guard loops) as the oracle."""
+    gammas = [Fraction(1), Fraction(2), Fraction(3), Fraction(5, 2),
+              Fraction(7, 4), Fraction(1, 8), Fraction(1000)]
+    for gamma in gammas:
+        for key in list(range(1, 300)) + [2**40, 2**40 + 1]:
+            b = geometric_bucket(key, gamma)
+            # exact rational checks of the defining inequalities
+            assert key <= gamma * 2**b
+            assert b == 0 or key > gamma * 2**(b - 1)
+            # float-log reference (guarded the way the old code was)
+            ref = max(0, math.ceil(math.log2(key / float(gamma))))
+            while key > float(gamma) * 2**ref:
+                ref += 1
+            while ref > 0 and key <= float(gamma) * 2**(ref - 1):
+                ref -= 1
+            assert b == ref, (key, gamma)
+    assert geometric_bucket(0, Fraction(3)) == 0
+    assert geometric_bucket(-5, Fraction(3)) == 0
+
+
+# --- GammaEpoch policy ------------------------------------------------------
+
+def test_gamma_epoch_monotone_downward_and_roundtrip():
+    e = GammaEpoch()
+    assert e.observe(5) == Fraction(5) and e.rescales == 0
+    assert e.observe(7) == Fraction(5)          # never rescales upward
+    assert e.observe(2) == Fraction(5, 4) and e.rescales == 2
+    assert e.observe(1) == Fraction(5, 8) and e.rescales == 3
+    assert e.observe(1) == Fraction(5, 8)       # converged: stays put
+    e2 = GammaEpoch.from_state(e.state())
+    assert e2.pinned == e.pinned and e2.rescales == e.rescales
+    assert not e2.fixed
+
+    fixed = GammaEpoch.from_policy(Fraction(3, 2))
+    assert fixed.fixed and fixed.observe(1) == Fraction(3, 2)
+    assert GammaEpoch.from_policy("residual") is None
+    assert GammaEpoch.from_policy("pinned").pinned is None
+    for bad in ("sticky", 0, -1, True, 1.5):
+        with pytest.raises(ValueError, match="gamma"):
+            GammaEpoch.from_policy(bad)
+    with pytest.raises(ValueError, match="natural"):
+        GammaEpoch().observe(0)
+
+
+def test_gamma_epoch_pin_is_path_independent():
+    """Observing a superset sequence of naturals lands on the same pin —
+    the property that keeps the stream driver's extra zero-time replans
+    bit-identical to the batch driver's coarser replan sequence."""
+    a = GammaEpoch()
+    for nat in (12, 9, 9, 5, 5, 2):
+        a.observe(nat)
+    b = GammaEpoch()
+    for nat in (12, 2):
+        b.observe(nat)
+    assert a.pinned == b.pinned
+    assert a.rescales == b.rescales
+
+
+# --- grouping under pinned gamma -------------------------------------------
+
+def test_group_jobs_pinned_equals_residual_when_gamma_unchanged():
+    for seed in range(3):
+        inst = rand_instance(seed + 9, n_jobs=6, releases=True)
+        order = cached_job_order(inst).order
+        residual = group_jobs(inst, order)
+        pinned = group_jobs(inst, order, gamma=Fraction(inst.gamma()))
+        assert residual == pinned
+        # a finer pin only splits groups; every job stays grouped
+        finer = group_jobs(inst, order, gamma=Fraction(inst.gamma(), 2))
+        assert sorted(j for g in finer for j in g) == \
+            sorted(j for g in residual for j in g)
+    with pytest.raises(ValueError, match="gamma"):
+        group_jobs(inst, order, gamma=0)
+
+
+@pytest.mark.parametrize("rooted", [False, True])
+def test_gdm_pinned_gamma_feasible_and_backfill_no_worse_9x6(rooted):
+    """The 9x6 random-DAG matrix (releases on): pinned-gamma plans stay
+    capacity/precedence-feasible and backfill still never hurts."""
+    inst = rand_instance(9, n_jobs=6, rooted=rooted, releases=True)
+    nat = Fraction(inst.gamma())
+    for gamma in (nat, nat / 2, Fraction(nat, 4)):
+        s = gdm(inst, rooted=rooted, delays="spread", gamma=gamma)
+        verify_schedule(inst, s)
+        assert s.meta["gamma"] == gamma
+        bf = backfill(s)
+        assert bf.twct() <= s.twct() + 1e-6
+        assert bf.makespan <= s.makespan + 1e-6
+
+
+def test_group_block_cache_identity():
+    """Spread-mode gdm through the group-block cache is bit-identical to
+    the cache-bypassing construction."""
+    inst = rand_instance(4, n_jobs=6, releases=True)
+    backend.clear_caches()
+    cached = gdm(inst, delays="spread")
+    again = gdm(inst, delays="spread")           # fully cache-served
+    with backend.no_caches():
+        direct = gdm(inst, delays="spread")
+    for other in (again, direct):
+        assert cached.job_completions() == other.job_completions()
+        assert [(e.t0, e.t1, e.jid, e.cid) for e in
+                cached.transcript().entries] == \
+            [(e.t0, e.t1, e.jid, e.cid) for e in
+             other.transcript().entries]
+    st = backend.cache_stats()["group"]
+    assert st["hits"] > 0
+
+
+def test_group_block_rejects_randomized_modes():
+    inst = rand_instance(4, n_jobs=2)
+    with pytest.raises(ValueError, match="spread"):
+        backend.group_block("gdm", inst.jobs, inst.m, delays="random")
+    with pytest.raises(ValueError, match="kind"):
+        backend.group_block("om_alg", inst.jobs, inst.m, delays="spread")
+
+
+# --- session integration ----------------------------------------------------
+
+@pytest.mark.parametrize("sched,opts", [
+    ("gdm", {"delays": "spread", "seed": 0}),
+    ("gdm_rt", {"delays": "spread", "seed": 0}),
+])
+def test_pinned_stream_is_bit_identical_to_batch(sched, opts):
+    jobs = _trace()
+    inst = Instance(M, list(jobs))
+    res = run_stream(jobs, M, sched, gamma="pinned", **opts)
+    batch = simulate_online(inst, sched, driver="batch", gamma="pinned",
+                            **opts)
+    assert res.online.job_completions == batch.job_completions
+    assert res.online.twct() == batch.twct()
+
+
+def test_gamma_needs_engine_gdm_scheduler():
+    with pytest.raises(ValueError, match="gamma"):
+        SchedulerSession(M, "om_alg", gamma="pinned")
+    with pytest.raises(ValueError, match="gamma"):
+        simulate_online(Instance(M, _trace(n=3)), "om_alg", driver="batch",
+                        gamma="pinned")
+    SchedulerSession(M, "gdm", gamma="pinned", delays="spread")  # fine
+
+
+@pytest.mark.parametrize("sched", ["gdm", "gdm_rt"])
+def test_sustained_pinned_hit_rate_floor_and_rescale_accounting(sched):
+    """The tentpole's payoff, as a fixed-seed CI floor: pinning gamma must
+    lift the pure-mode (no admission policy) repair hit rate to >= 0.4 on
+    the sustained-arrivals trace, strictly above the residual-gamma run,
+    while staying bit-identical to its own batch comparator."""
+    jobs = _trace(n=60)
+    pinned = run_stream(jobs, M, sched, gamma="pinned", delays="spread",
+                        seed=0)
+    residual = run_stream(jobs, M, sched, delays="spread", seed=0)
+    sp = pinned.online.stats["session"]
+    sr = residual.online.stats["session"]
+    assert sp["repair_hit_rate"] >= 0.4
+    assert sp["repair_hit_rate"] > sr["repair_hit_rate"]
+    assert sp["groups_reused"] > sr["groups_reused"]
+    # rescale accounting: heavy-tail sizes drain through small residuals,
+    # so the pin must halve at least once — and only the pinned run counts
+    assert sp["gamma_rescales"] > 0
+    assert sr["gamma_rescales"] == 0
+
+
+def test_pinned_snapshot_restore_continues_bit_identically():
+    jobs = _trace(n=30)
+    opts = {"delays": "spread", "seed": 0}
+    ref = run_stream(jobs, M, "gdm", gamma="pinned", **opts)
+
+    drv = StreamDriver(M, "gdm", gamma="pinned", **opts)
+    for j in jobs[:11]:
+        drv.feed(j)
+    snap = drv.session.snapshot()
+    assert snap.gamma_epoch is not None     # the pin rides the snapshot
+
+    resumed = SchedulerSession.restore(snap, jobs[:11], "gdm",
+                                       gamma="pinned", **opts)
+    assert resumed._gamma_epoch.state() == snap.gamma_epoch
+    for j in jobs[11:]:
+        resumed.submit(j)
+    resumed.advance()
+    out = resumed.result()
+    assert out.job_completions == ref.online.job_completions
+    assert out.twct() == ref.online.twct()
+
+    # a residual-gamma snapshot carries no epoch
+    drv2 = StreamDriver(M, "gdm", **opts)
+    for j in jobs[:5]:
+        drv2.feed(j)
+    assert drv2.session.snapshot().gamma_epoch is None
+
+
+def test_grouping_prefix_extends_cached_cumsum():
+    """Appending jobs to an already-planned order extends the cached
+    prefix cumsum (the 'extended' counter) instead of recomputing it."""
+    from repro.core.ordering import job_load_vectors
+
+    inst = rand_instance(11, n_jobs=5)
+    order = cached_job_order(inst).order
+    by_id = {j.jid: j for j in inst.jobs}
+    sub = Instance(inst.m, [by_id[jid] for jid in order[:4]])
+    backend.clear_caches()
+    D4 = backend.grouping_prefix(sub, order[:4])
+    assert dict(backend.cache_stats()["gkey"]["prefix"]) == \
+        {"exact": 0, "extended": 0, "cold": 1}
+    D5 = backend.grouping_prefix(inst, order)       # appended-arrival shape
+    assert backend.cache_stats()["gkey"]["prefix"]["extended"] == 1
+    assert np.array_equal(D5[:4], D4)
+    # exact against the monolithic cumsum of per-job load vectors
+    rows = job_load_vectors([by_id[jid] for jid in order], inst.m)
+    ref = np.cumsum(rows, axis=0).max(axis=1).astype(np.int64)
+    assert np.array_equal(D5, ref)
+    assert np.array_equal(backend.grouping_prefix(inst, order), D5)
+    assert backend.cache_stats()["gkey"]["prefix"]["exact"] == 1
